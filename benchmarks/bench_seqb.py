@@ -1,0 +1,70 @@
+"""Paper Figs 8/10/12/15 (SEQB): precision + hit-rate vs cache size and
+zipf exponent, latency percentiles, throughput percentiles, runtime — for
+the three heuristics vs baseline."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import latency_stats, row, throughput_stats
+from .workloads import SEQB, SEQBConfig, run_baseline, run_two_stage
+
+HEURISTICS = ("fetch_all", "fetch_top_n", "fetch_progressive")
+
+
+def one_config(seqb: SEQB, heuristic: str, cache_bytes: int, seed=1):
+    store = seqb.make_store()
+    client, lats, vtime, wall = run_two_stage(
+        store,
+        seqb.sessions(np.random.default_rng(seed)),
+        seqb.sessions(np.random.default_rng(seed + 1)),
+        heuristic=heuristic, cache_bytes=cache_bytes)
+    return client, lats, vtime, wall
+
+
+def main(quick: bool = True):
+    n_sessions = 600 if quick else 1_500
+    cache_sizes = ((64 << 10, 256 << 10, 1 << 20, 4 << 20) if quick else
+                   (32 << 10, 64 << 10, 128 << 10, 256 << 10, 512 << 10,
+                    1 << 20, 2 << 20, 4 << 20))
+    exps = (0.5, 1.0, 2.0) if quick else (0.5, 1.0, 1.5, 2.0, 2.5, 3.0)
+
+    # -- Fig 8a/8b: cache-size sweep at zipf 1.0 -------------------------
+    seqb = SEQB(SEQBConfig(zipf_exp=1.0, n_sessions=n_sessions))
+    base_lats, base_vtime = run_baseline(
+        seqb.make_store(), seqb.sessions(np.random.default_rng(2)))
+    bstats = latency_stats(base_lats)
+    row("seqb_baseline", bstats["mean_us"], **bstats,
+        **throughput_stats(base_lats), runtime_s=base_vtime)
+    for cache in cache_sizes:
+        for h in HEURISTICS:
+            client, lats, vtime, _ = one_config(seqb, h, cache)
+            s = client.stats
+            row(f"seqb_cache{cache >> 10}k_{h}",
+                latency_stats(lats)["mean_us"],
+                precision=s.precision, hit_rate=s.hit_rate,
+                prefetches=s.prefetches)
+
+    # -- Fig 8c/8d + 10 + 12 + 15: zipf sweep at 64 KB cache ------------
+    for exp in exps:
+        seqb = SEQB(SEQBConfig(zipf_exp=exp, n_sessions=n_sessions))
+        base_lats, base_vtime = run_baseline(
+            seqb.make_store(), seqb.sessions(np.random.default_rng(2)))
+        row(f"seqb_exp{exp}_baseline", latency_stats(base_lats)["mean_us"],
+            **latency_stats(base_lats), **throughput_stats(base_lats),
+            runtime_s=base_vtime)
+        for h in HEURISTICS:
+            client, lats, vtime, _ = one_config(seqb, h, 64 << 10)
+            s = client.stats
+            ls = latency_stats(lats)
+            ts = throughput_stats(lats)
+            row(f"seqb_exp{exp}_{h}", ls["mean_us"], **ls, **ts,
+                precision=s.precision, hit_rate=s.hit_rate,
+                runtime_s=vtime,
+                speedup_runtime=base_vtime / vtime if vtime else 0.0,
+                speedup_mean_lat=(latency_stats(base_lats)["mean_us"]
+                                  / max(ls["mean_us"], 1e-9)))
+
+
+if __name__ == "__main__":
+    main(quick=False)

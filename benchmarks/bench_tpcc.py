@@ -1,0 +1,72 @@
+"""Paper Figs 9/11/13/14/16 (TPC-C): precision + hit rate vs cache size and
+sequence factor, latency/throughput percentiles, tpmC rate, runtime."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import latency_stats, row, throughput_stats
+from .workloads import TPCC, TPCCConfig, run_baseline, run_two_stage
+
+HEURISTICS = ("fetch_all", "fetch_top_n", "fetch_progressive")
+
+
+def tx_sessions(gen: TPCC, rng, n: int):
+    for _ in range(n):
+        yield gen.transaction(rng)
+
+
+def main(quick: bool = True):
+    n_tx = 200 if quick else 350
+    cache_sizes = ((64 << 10, 1 << 20) if quick else
+                   (64 << 10, 256 << 10, 1 << 20, 4 << 20))
+    seq_factors = (0.2, 0.6, 1.0) if quick else (
+        0.1, 0.2, 0.4, 0.6, 0.8, 1.0, 1.5, 2.0)
+    gen = TPCC(TPCCConfig(n_transactions=n_tx))
+
+    base_lats, base_vtime = run_baseline(
+        gen.make_store(), tx_sessions(gen, np.random.default_rng(2), n_tx))
+    bls = latency_stats(base_lats)
+    base_tpm = n_tx / (base_vtime / 60.0)
+    row("tpcc_baseline", bls["mean_us"], **bls,
+        **throughput_stats(base_lats, window=50),
+        tpm=base_tpm, runtime_s=base_vtime)
+
+    # -- Fig 9a/9b: cache-size sweep at sequence factor 1 -----------------
+    for cache in cache_sizes:
+        for h in HEURISTICS:
+            store = gen.make_store()
+            client, lats, vtime, _ = run_two_stage(
+                store,
+                tx_sessions(gen, np.random.default_rng(1), n_tx),
+                tx_sessions(gen, np.random.default_rng(3), n_tx),
+                heuristic=h, cache_bytes=cache, minsup=0.02,
+                column_mining=True)
+            s = client.stats
+            row(f"tpcc_cache{cache >> 10}k_{h}",
+                latency_stats(lats)["mean_us"],
+                precision=s.precision, hit_rate=s.hit_rate)
+
+    # -- Figs 9c/9d + 11 + 13 + 14 + 16: sequence-factor sweep ------------
+    for sf in seq_factors:
+        for h in HEURISTICS:
+            store = gen.make_store()
+            client, lats, vtime, _ = run_two_stage(
+                store,
+                tx_sessions(gen, np.random.default_rng(1), int(n_tx * sf)),
+                tx_sessions(gen, np.random.default_rng(3), n_tx),
+                heuristic=h, cache_bytes=1 << 20, minsup=0.02,
+                column_mining=True)
+            s = client.stats
+            ls = latency_stats(lats)
+            tpm = n_tx / (vtime / 60.0) if vtime else 0.0
+            row(f"tpcc_sf{sf}_{h}", ls["mean_us"], **ls,
+                **throughput_stats(lats, window=50),
+                precision=s.precision, hit_rate=s.hit_rate,
+                tpm=tpm, tpm_vs_baseline=tpm / base_tpm,
+                runtime_s=vtime,
+                speedup_runtime=base_vtime / vtime if vtime else 0.0)
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,47 @@
+"""Shared benchmark reporting helpers.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows; ``derived``
+packs the figure-specific values as ``k=v|k=v`` pairs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["latency_stats", "throughput_stats", "row"]
+
+
+def latency_stats(lats) -> dict:
+    a = np.asarray(lats, np.float64)
+    return {
+        "mean_us": a.mean() * 1e6,
+        "median_us": np.median(a) * 1e6,
+        "p5_us": np.percentile(a, 5) * 1e6,
+        "p95_us": np.percentile(a, 95) * 1e6,
+    }
+
+
+def throughput_stats(lats, window: int = 200) -> dict:
+    """Windowed ops/s percentiles over the virtual timeline (Fig 12/13)."""
+    a = np.asarray(lats, np.float64)
+    n = len(a) // window
+    if n == 0:
+        return {"mean_ops": 0.0, "median_ops": 0.0, "p5_ops": 0.0,
+                "p95_ops": 0.0}
+    w = a[: n * window].reshape(n, window).sum(axis=1)
+    ops = window / w
+    return {
+        "mean_ops": ops.mean(),
+        "median_ops": float(np.median(ops)),
+        "p5_ops": float(np.percentile(ops, 5)),
+        "p95_ops": float(np.percentile(ops, 95)),
+    }
+
+
+def row(name: str, us_per_call: float, **derived) -> str:
+    packed = "|".join(
+        f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+        for k, v in derived.items())
+    line = f"{name},{us_per_call:.3f},{packed}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,54 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` runs the paper's
+full sweep sizes (minutes); the default quick mode covers every figure at
+reduced sweep density.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: mining,seqb,tpcc,dynamic,overhead,"
+                         "expert,kernels")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (
+        bench_dynamic,
+        bench_expert_prefetch,
+        bench_kernels,
+        bench_mining,
+        bench_overhead,
+        bench_seqb,
+        bench_tpcc,
+    )
+
+    suites = [
+        ("mining", bench_mining),           # Fig 1 + Fig 7 + §5.1 table
+        ("seqb", bench_seqb),               # Figs 8, 10, 12, 15
+        ("tpcc", bench_tpcc),               # Figs 9, 11, 13, 14, 16
+        ("dynamic", bench_dynamic),         # Fig 17
+        ("overhead", bench_overhead),       # Fig 18
+        ("expert", bench_expert_prefetch),  # beyond-paper MoE prefetch
+        ("kernels", bench_kernels),         # kernel micro-bench
+    ]
+    print("name,us_per_call,derived")
+    for name, mod in suites:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        mod.main(quick=quick)
+        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

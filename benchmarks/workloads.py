@@ -1,0 +1,282 @@
+"""Benchmark workloads: SEQB and (simplified) TPC-C over the simulated DKV
+store — the paper's two evaluation drivers (§5), at a reduced-but-faithful
+scale so the whole suite runs on one CPU core in minutes.
+
+Scale note: the paper uses 2.3M × 1000 B blocks with 2–256 MB caches; we
+scale both store and cache by ~100× (100k × 256 B blocks, 64 KB–4 MB
+caches) keeping the cache:working-set ratios — the figures reproduce the
+paper's *shapes and relative gains*, not absolute byte counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core import (
+    BaselineClient,
+    HeuristicConfig,
+    MiningParams,
+    PalpatineClient,
+    PalpatineConfig,
+    SimulatedDKVStore,
+)
+
+__all__ = ["SEQBConfig", "SEQB", "TPCCConfig", "TPCC", "run_two_stage"]
+
+
+# ---------------------------------------------------------------------------
+# SEQB
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SEQBConfig:
+    n_blocks: int = 100_000
+    block_bytes: int = 256
+    n_frequent: int = 512          # paper: 80..10,240 frequent sequences
+    min_seq: int = 3               # paper: 3..10
+    max_seq: int = 10
+    zipf_exp: float = 1.0          # paper: 0.5..3.0
+    n_sessions: int = 1_500        # per stage (paper: 10,000 total)
+    p_pattern: float = 0.85        # read ops following frequent sequences
+    write_frac: float = 0.02       # read-intensive
+    seed: int = 0
+
+
+class SEQB:
+    def __init__(self, cfg: SEQBConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        self.sequences = [
+            [int(b) for b in rng.choice(cfg.n_blocks,
+                                        size=int(rng.integers(cfg.min_seq,
+                                                              cfg.max_seq + 1)),
+                                        replace=False)]
+            for _ in range(cfg.n_frequent)
+        ]
+        ranks = np.arange(1, cfg.n_frequent + 1, dtype=np.float64)
+        w = ranks ** (-cfg.zipf_exp)
+        self.seq_probs = w / w.sum()
+
+    def make_store(self) -> SimulatedDKVStore:
+        store = SimulatedDKVStore()
+        store.load(
+            (self.key(i), bytes(self.cfg.block_bytes))
+            for i in range(self.cfg.n_blocks))
+        return store
+
+    @staticmethod
+    def key(block: int):
+        return ("blocks", f"b{block}", "d")
+
+    def sessions(self, rng, n: Optional[int] = None) -> Iterator[list]:
+        cfg = self.cfg
+        for _ in range(n or cfg.n_sessions):
+            if rng.random() < cfg.p_pattern:
+                idx = int(rng.choice(len(self.sequences), p=self.seq_probs))
+                blocks = self.sequences[idx]
+            else:
+                # background traffic is zipf-like too (paper: "some data
+                # containers are accessed more often than others"):
+                # log-uniform block popularity
+                size = int(rng.integers(cfg.min_seq, cfg.max_seq + 1))
+                blocks = [int(cfg.n_blocks ** rng.random()) - 1
+                          for _ in range(size)]
+                blocks = [b if b >= 0 else 0 for b in blocks]
+            yield [self.key(b) for b in blocks]
+
+
+# ---------------------------------------------------------------------------
+# TPC-C (simplified wholesale-supplier workload, standard transaction mix)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TPCCConfig:
+    warehouses: int = 1
+    districts: int = 10            # paper scale
+    customers_per_district: int = 300   # paper: 3000 (scaled 10x)
+    items: int = 10_000            # paper: 100,000 (scaled 10x)
+    orders_per_district: int = 90  # paper: 900 (scaled 10x)
+    value_bytes: int = 200         # paper: blocks of <= 500 bytes
+    n_transactions: int = 350      # paper: 350 second-stage transactions
+    seed: int = 0
+
+
+class TPCC:
+    """Transactions become container-access sessions; the standard mix is
+    new-order 45%, payment 43%, order-status 4%, delivery 4%, stock-level 4%.
+    """
+
+    MIX = (("new_order", 0.45), ("payment", 0.43), ("order_status", 0.04),
+           ("delivery", 0.04), ("stock_level", 0.04))
+
+    def __init__(self, cfg: TPCCConfig):
+        self.cfg = cfg
+
+    # -- keys ---------------------------------------------------------------
+    @staticmethod
+    def k_warehouse(w):
+        return ("warehouse", f"w{w}", "info")
+
+    @staticmethod
+    def k_district(w, d):
+        return ("district", f"w{w}d{d}", "info")
+
+    @staticmethod
+    def k_customer(w, d, c):
+        return ("customer", f"w{w}d{d}c{c}", "info")
+
+    @staticmethod
+    def k_item(i):
+        return ("item", f"i{i}", "info")
+
+    @staticmethod
+    def k_stock(w, i):
+        return ("stock", f"w{w}i{i}", "qty")
+
+    @staticmethod
+    def k_order(w, d, o):
+        return ("orders", f"w{w}d{d}o{o}", "info")
+
+    @staticmethod
+    def k_order_line(w, d, o, l):
+        return ("order_line", f"w{w}d{d}o{o}", f"l{l}")
+
+    def make_store(self) -> SimulatedDKVStore:
+        cfg = self.cfg
+        store = SimulatedDKVStore()
+        val = bytes(cfg.value_bytes)
+        items = []
+        for w in range(cfg.warehouses):
+            items.append((self.k_warehouse(w), val))
+            for d in range(cfg.districts):
+                items.append((self.k_district(w, d), val))
+                for c in range(cfg.customers_per_district):
+                    items.append((self.k_customer(w, d, c), val))
+                for o in range(cfg.orders_per_district):
+                    items.append((self.k_order(w, d, o), val))
+                    for l in range(3):
+                        items.append((self.k_order_line(w, d, o, l), val))
+        for i in range(cfg.items):
+            items.append((self.k_item(i), val))
+            for w in range(cfg.warehouses):
+                items.append((self.k_stock(w, i), val))
+        store.load(items)
+        return store
+
+    # -- transactions as (op, key) sessions ----------------------------------
+    def transaction(self, rng) -> list:
+        cfg = self.cfg
+        r = rng.random()
+        acc = 0.0
+        kind = self.MIX[-1][0]
+        for name, p in self.MIX:
+            acc += p
+            if r < acc:
+                kind = name
+                break
+        w = int(rng.integers(0, cfg.warehouses))
+        d = int(rng.integers(0, cfg.districts))
+        c = self._nurand(rng, cfg.customers_per_district)
+        ops: list = [("r", self.k_warehouse(w)), ("r", self.k_district(w, d))]
+        if kind == "new_order":
+            ops.append(("r", self.k_customer(w, d, c)))
+            o = int(rng.integers(0, cfg.orders_per_district))
+            ops.append(("w", self.k_order(w, d, o)))
+            for l in range(int(rng.integers(2, 5))):
+                i = self._nurand(rng, cfg.items)
+                ops += [("r", self.k_item(i)), ("r", self.k_stock(w, i)),
+                        ("w", self.k_stock(w, i)),
+                        ("w", self.k_order_line(w, d, o, l))]
+        elif kind == "payment":
+            ops += [("w", self.k_warehouse(w)), ("w", self.k_district(w, d)),
+                    ("r", self.k_customer(w, d, c)),
+                    ("w", self.k_customer(w, d, c))]
+        elif kind == "order_status":
+            o = int(rng.integers(0, cfg.orders_per_district))
+            ops += [("r", self.k_customer(w, d, c)),
+                    ("r", self.k_order(w, d, o))]
+            ops += [("r", self.k_order_line(w, d, o, l)) for l in range(3)]
+        elif kind == "delivery":
+            for o in rng.integers(0, cfg.orders_per_district, size=3):
+                ops += [("r", self.k_order(w, d, int(o))),
+                        ("w", self.k_order(w, d, int(o)))]
+        else:  # stock_level
+            for i in rng.integers(0, cfg.items, size=6):
+                ops.append(("r", self.k_stock(w, int(i))))
+        return ops
+
+    @staticmethod
+    def _nurand(rng, n: int) -> int:
+        """Non-uniform access (TPC-C NURand flavour): 30% of keys get 70%
+        of accesses."""
+        if rng.random() < 0.7:
+            return int(rng.integers(0, max(1, int(n * 0.3))))
+        return int(rng.integers(0, n))
+
+
+# ---------------------------------------------------------------------------
+# two-stage driver (stage 1: observe+mine; stage 2: steady state)
+# ---------------------------------------------------------------------------
+
+
+def run_two_stage(store, sessions_stage1, sessions_stage2, *,
+                  heuristic="fetch_progressive", cache_bytes=1 << 20,
+                  minsup=0.02, prefetch=True, mining_algo="vmsp",
+                  top_n=5, min_patterns=400, minsup_floor=0.002,
+                  column_mining=False):
+    """Returns (client, stage2 per-op latencies, stage2 virtual time,
+    stage2 wall time)."""
+    cfg = PalpatineConfig(
+        heuristic=HeuristicConfig(heuristic, top_n=top_n),
+        cache_bytes=cache_bytes,
+        mining=MiningParams(minsup=minsup, min_len=3, max_len=15, maxgap=1),
+        algo=mining_algo,
+        prefetch_enabled=prefetch,
+        min_patterns=min_patterns,
+        dynamic_minsup_floor=minsup_floor,
+        column_mining=column_mining,
+    )
+    client = PalpatineClient(store, cfg)
+    for sess in sessions_stage1:
+        for op in sess:
+            _apply(client, op)
+        client.end_session()
+    client.mine_now()
+    # reset stats so stage 2 is the steady state measurement
+    from repro.core.cache import CacheStats
+
+    client.cache.stats = CacheStats()
+    t0 = client.clock.now
+    import time as _time
+    w0 = _time.perf_counter()
+    lats = []
+    for sess in sessions_stage2:
+        for op in sess:
+            lats.append(_apply(client, op))
+        client.end_session()
+    wall = _time.perf_counter() - w0
+    return client, lats, client.clock.now - t0, wall
+
+
+def _apply(client, op):
+    if isinstance(op, tuple) and len(op) == 2 and op[0] in ("r", "w"):
+        kind, key = op
+        if kind == "w":
+            return client.write(key, b"x" * 64)
+        return client.read(key)[1]
+    return client.read(op)[1]
+
+
+def run_baseline(store, sessions) -> tuple[list, float]:
+    client = BaselineClient(store)
+    t0 = client.clock.now
+    lats = []
+    for sess in sessions:
+        for op in sess:
+            lats.append(_apply(client, op))
+    return lats, client.clock.now - t0

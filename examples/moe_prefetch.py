@@ -1,0 +1,52 @@
+"""The paper's technique as a framework feature: PALPATINE prefetching
+MoE expert weights during serving.
+
+Expert-routing paths (layer, expert) form access sessions; VMSP mines the
+frequent routing sequences; the prefetcher stages predicted experts from
+the host cold tier into the device cache before the decode stream needs
+them.
+
+    PYTHONPATH=src python examples/moe_prefetch.py
+"""
+
+import numpy as np
+
+from repro.serving import ExpertPrefetcher, ExpertStore, PrefetcherConfig
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n_layers, n_experts = 8, 32
+    store = ExpertStore(n_layers, n_experts, d=128, f=256)
+    # domains induce sticky expert routing paths (code, chat, math, ...)
+    domains = [[(l, int(rng.integers(0, n_experts))) for l in range(n_layers)]
+               for _ in range(5)]
+    pf = ExpertPrefetcher(store, PrefetcherConfig(cache_experts=20,
+                                                  mine_every_sessions=50))
+
+    def serve(n_requests):
+        for _ in range(n_requests):
+            path = (domains[int(rng.integers(0, 5))]
+                    if rng.random() < 0.75 else
+                    [(l, int(rng.integers(0, n_experts)))
+                     for l in range(n_layers)])
+            for layer, expert in path:
+                pf.access(layer, expert)   # returns the device-ready weight
+            pf.end_session()
+
+    serve(200)   # warm + mine
+    before = dict(pf.stats)
+    serve(400)   # steady state
+    after = pf.stats
+    print(f"[moe] mined {len(pf.metastore)} routing sequences, "
+          f"{len(pf.engine.index.trees)} trees")
+    print(f"[moe] hit rate {after['hit_rate']:.2%}, "
+          f"prefetch precision {after['precision']:.2%}")
+    print(f"[moe] demand-fetch wall {after['demand_wait_s']:.3f}s over "
+          f"{after['store_fetches']} host->device transfers")
+    print("[moe] (compare: cache-only ablation in "
+          "benchmarks/bench_expert_prefetch.py)")
+
+
+if __name__ == "__main__":
+    main()

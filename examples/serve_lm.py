@@ -1,0 +1,41 @@
+"""Serving example: batched prefill + decode with the ServingEngine.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch codeqwen1.5-7b
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.serving import ServeConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="codeqwen1.5-7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))  # CPU-sized same-family model
+    params = init_params(cfg, jax.random.key(0))
+    engine = ServingEngine(cfg, params, ServeConfig(
+        max_len=args.prompt_len + args.new_tokens, temperature=0.8))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(
+        0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
+    out = engine.generate(prompts, args.new_tokens)
+    print(f"[serve] arch={args.arch} (reduced) batch={args.batch}")
+    print(f"[serve] prefill {engine.stats['prefill_s']:.2f}s, "
+          f"decode {engine.stats['decode_s']:.2f}s, "
+          f"{engine.tokens_per_s:.1f} tok/s")
+    print(f"[serve] sample continuation ids: {out[0][:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""PALPATINE core: the paper's contribution.
+
+Frequent-sequence mining over intercepted DKV access logs (VMSP + the
+compared algorithm families), probabilistic trees, prefetching heuristics,
+and the two-space application-level cache — plus the simulated HBase-like
+back store used by the paper-fidelity benchmarks.
+"""
+
+from .backstore import Clock, LatencyModel, SimulatedDKVStore
+from .cache import CacheStats, TwoSpaceCache
+from .heuristics import HEURISTICS, HeuristicConfig, PrefetchEngine
+from .metastore import PatternMetastore
+from .mining import (
+    ALGORITHMS,
+    MiningParams,
+    Pattern,
+    VerticalBitmaps,
+    brute_force,
+    mine,
+    mine_dynamic_minsup,
+)
+from .palpatine import BaselineClient, PalpatineClient, PalpatineConfig
+from .ptree import PTree, PTreeIndex
+from .sessions import AccessLogger, Container, SequenceDatabase
+
+__all__ = [
+    "AccessLogger", "ALGORITHMS", "BaselineClient", "CacheStats", "Clock",
+    "Container", "HEURISTICS", "HeuristicConfig", "LatencyModel",
+    "MiningParams", "Pattern", "PatternMetastore", "PalpatineClient",
+    "PalpatineConfig", "PrefetchEngine", "PTree", "PTreeIndex",
+    "SequenceDatabase", "SimulatedDKVStore", "TwoSpaceCache",
+    "VerticalBitmaps", "brute_force", "mine", "mine_dynamic_minsup",
+]

@@ -1,0 +1,139 @@
+"""Prefetching heuristics (Palpatine §4.3).
+
+Each client read that matches a root node of a stored probabilistic tree
+opens a *prefetch context*.  Multiple contexts may be active in parallel.
+The three strategies, conservative → progressive:
+
+* ``fetch_all``          — prefetch the entire tree (best accuracy, highest
+                           pollution potential).
+* ``fetch_top_n``        — prefetch the n nodes with highest *cumulative*
+                           probability, level-order first, probability-wise
+                           second (default n=5).
+* ``fetch_progressive``  — prefetch the next n levels (default n=2); on each
+                           subsequent request that continues the matched
+                           subsequence without gaps, prefetch the next
+                           non-cached level reachable from the confirmed
+                           path; abandon on divergence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+from .ptree import PNode, PTree, PTreeIndex
+
+__all__ = ["HeuristicConfig", "PrefetchContext", "PrefetchEngine", "HEURISTICS"]
+
+HEURISTICS = ("fetch_all", "fetch_top_n", "fetch_progressive")
+
+
+@dataclasses.dataclass(frozen=True)
+class HeuristicConfig:
+    name: str = "fetch_progressive"
+    top_n: int = 5               # fetch_top_n
+    progressive_depth: int = 2   # fetch_progressive levels-ahead
+
+    def __post_init__(self):
+        if self.name not in HEURISTICS:
+            raise ValueError(f"unknown heuristic {self.name!r}")
+
+
+class PrefetchContext:
+    """Per-root-match state machine.  ``initial()`` yields the first wave of
+    nodes to prefetch; ``on_request(item)`` advances the context and yields
+    follow-up waves (only fetch_progressive is multi-wave)."""
+
+    def __init__(self, tree: PTree, cfg: HeuristicConfig):
+        self.tree = tree
+        self.cfg = cfg
+        self.node = tree.root          # confirmed position (progressive)
+        self.fetched_depth = 0         # deepest level already requested
+        self.alive = True
+
+    def initial(self) -> list[PNode]:
+        name = self.cfg.name
+        if name == "fetch_all":
+            self.alive = False
+            return list(self.tree.nodes_below())
+        if name == "fetch_top_n":
+            self.alive = False
+            return self.tree.top_n_cumulative(self.cfg.top_n)
+        # fetch_progressive: next n levels from the root
+        self.fetched_depth = min(self.cfg.progressive_depth, self.tree.max_depth)
+        return self.tree.levels(1, self.fetched_depth)
+
+    def on_request(self, item: int) -> list[PNode]:
+        """Progressive only: confirm the path or die."""
+        if not self.alive:
+            return []
+        child = self.node.children.get(item)
+        if child is None:
+            self.alive = False  # request diverged from the frequent sequence
+            return []
+        self.node = child
+        if self.node.depth >= self.tree.max_depth or not self.node.children:
+            self.alive = False
+        # cut the tree along the confirmed path: fetch the next non-cached
+        # level reachable from the confirmed node
+        target = self.node.depth + self.cfg.progressive_depth
+        if target <= self.fetched_depth:
+            return []
+        lo = self.fetched_depth + 1
+        self.fetched_depth = target
+        return _subtree_levels(self.node, lo, target)
+
+
+def _subtree_levels(node: PNode, lo: int, hi: int) -> list[PNode]:
+    """Nodes in ``node``'s subtree with absolute depth in [lo, hi]."""
+    out: list[PNode] = []
+    for nd in node.level_order():
+        if nd.depth > hi:
+            break
+        if nd.depth >= lo:
+            out.append(nd)
+    return out
+
+
+class PrefetchEngine:
+    """Matches requests against the root index, manages live contexts, and
+    emits the list of items to prefetch for each request (paper §4.1 steps
+    g/h/i)."""
+
+    def __init__(self, index: PTreeIndex, cfg: HeuristicConfig,
+                 max_contexts: int = 256):
+        self.index = index
+        self.cfg = cfg
+        self.max_contexts = max_contexts
+        self.contexts: list[PrefetchContext] = []
+
+    def replace_index(self, index: PTreeIndex) -> None:
+        """Fresh mining generation: drop stale contexts (their trees are
+        obsolete)."""
+        self.index = index
+        self.contexts = []
+
+    def on_request(self, item: int) -> list[int]:
+        """Returns item ids to prefetch (deduplicated, wave order kept)."""
+        wave: list[PNode] = []
+        # 1. advance live contexts along the confirmed subsequences
+        live: list[PrefetchContext] = []
+        for ctx in self.contexts:
+            wave.extend(ctx.on_request(item))
+            if ctx.alive:
+                live.append(ctx)
+        self.contexts = live
+        # 2. a request matching a root opens a new context
+        tree = self.index.match_root(item)
+        if tree is not None:
+            ctx = PrefetchContext(tree, self.cfg)
+            wave.extend(ctx.initial())
+            if ctx.alive and len(self.contexts) < self.max_contexts:
+                self.contexts.append(ctx)
+        seen: set = set()
+        out: list[int] = []
+        for nd in wave:
+            if nd.item not in seen:
+                seen.add(nd.item)
+                out.append(nd.item)
+        return out

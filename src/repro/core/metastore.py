@@ -1,0 +1,47 @@
+"""Pattern Metastore (Palpatine §3.2 "Data post-processing", §4.1 steps e/f).
+
+Bounds metadata memory: when the miner discovers more sequences than the
+capacity, keep the top ones ranked by ``length × support`` (the larger the
+sequence and the higher its support, the better).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+from .mining import Pattern
+
+__all__ = ["PatternMetastore"]
+
+
+class PatternMetastore:
+    def __init__(self, capacity: int = 10_000, max_pattern_len: int = 15):
+        self.capacity = int(capacity)
+        self.max_pattern_len = int(max_pattern_len)
+        self.patterns: list[Pattern] = []
+        self.generation = 0  # bumped on every (re)population
+
+    @staticmethod
+    def rank(p: Pattern) -> float:
+        return len(p.items) * p.support
+
+    def populate(self, patterns: Iterable[Pattern]) -> None:
+        """Replace contents with the top-ranked patterns (fresh mining run)."""
+        pats = [p for p in patterns if len(p.items) <= self.max_pattern_len]
+        pats.sort(key=self.rank, reverse=True)
+        self.patterns = pats[: self.capacity]
+        self.generation += 1
+
+    def add_apriori(self, sequences: Sequence[Sequence[int]], support: int = 1) -> None:
+        """Paper §4.1: apriori-known sequences may be stored alongside the
+        mined ones."""
+        merged = self.patterns + [Pattern(tuple(s), support) for s in sequences]
+        merged.sort(key=self.rank, reverse=True)
+        self.patterns = merged[: self.capacity]
+        self.generation += 1
+
+    def __len__(self) -> int:
+        return len(self.patterns)
+
+    def __iter__(self):
+        return iter(self.patterns)

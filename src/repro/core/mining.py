@@ -1,0 +1,440 @@
+"""Sequential pattern mining (Palpatine §3.2).
+
+Implements the algorithm families the paper compares, over a shared packed
+vertical-bitmap engine (the SPAM/VMSP representation):
+
+* ``gsp``        — Apriori, breadth-first candidate generation.
+* ``spam``       — Apriori, depth-first over vertical bitmaps (all patterns).
+* ``prefixspan`` — pattern-growth, depth-first projected databases.
+* ``vmsp``       — the paper's choice: SPAM-style DFS + *maximal* filtering.
+
+Palpatine's configuration (paper §3.2/§5): single-item itemsets (an access
+log is totally ordered), ``maxgap=1`` (consecutive pattern items must be
+adjacent in the session), pattern length in [3, 15], dynamic minimum support.
+
+Bitmaps are materialized for *frequent items only* (item support is counted
+from the padded session matrix first), so memory is O(freq_items × sessions ×
+words) — the back store may hold millions of containers but only the hot set
+enters the vertical representation.
+
+The support-counting inner loop (shift + AND + any-bit-per-session reduce)
+is the compute hot-spot; ``use_kernel=True`` routes the batched join through
+the Pallas TPU kernel in :mod:`repro.kernels.bitmap_support` (validated in
+interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from .sessions import SequenceDatabase
+
+__all__ = [
+    "MiningParams",
+    "Pattern",
+    "VerticalBitmaps",
+    "mine",
+    "gsp",
+    "spam",
+    "prefixspan",
+    "vmsp",
+    "maximal_filter",
+    "mine_dynamic_minsup",
+    "brute_force",
+]
+
+_WORD = 32  # packed uint32 words
+
+
+@dataclasses.dataclass(frozen=True)
+class MiningParams:
+    """User-specific constraints (paper §3.2 / §5 'Pattern mining')."""
+
+    minsup: float = 0.1          # fraction of sessions
+    min_len: int = 3
+    max_len: int = 15
+    maxgap: Optional[int] = 1    # 1 = contiguous (paper default); None = any
+    use_kernel: bool = False     # route support counting through Pallas
+
+    def minsup_count(self, n_sessions: int) -> int:
+        return max(1, int(math.ceil(self.minsup * n_sessions)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Pattern:
+    items: tuple
+    support: int
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+
+# ---------------------------------------------------------------------------
+# Vertical packed-bitmap engine (SPAM / VMSP representation)
+# ---------------------------------------------------------------------------
+
+
+class VerticalBitmaps:
+    """Per-item occurrence bitmaps for the frequent items, packed 32
+    positions/word.
+
+    ``bits[r]`` has shape (n_sessions, n_words); bit ``p % 32`` of word
+    ``p // 32`` for session ``s`` is set iff item ``freq_items[r]`` occurs at
+    position ``p`` of session ``s``.  Padding positions are never set, so
+    joining with an item bitmap implicitly masks shifted-past-the-end bits.
+    """
+
+    def __init__(self, db: SequenceDatabase, minsup_count: int = 1):
+        mat, _ = db.padded_matrix()
+        self.n_sessions = mat.shape[0]
+        max_len = mat.shape[1] if mat.size else 0
+        self.n_words = max(1, (max_len + _WORD - 1) // _WORD)
+
+        if mat.size:
+            sess, pos = np.nonzero(mat >= 0)
+            item = mat[sess, pos]
+            # item support = #sessions containing the item (count unique pairs)
+            pair = sess.astype(np.int64) * max(db.n_items, 1) + item
+            uniq = np.unique(pair)
+            per_item = np.bincount(
+                (uniq % max(db.n_items, 1)).astype(np.int64), minlength=db.n_items
+            )
+            self.freq_items = np.nonzero(per_item >= minsup_count)[0].astype(np.int32)
+            self.freq_support = per_item[self.freq_items].astype(np.int64)
+            row_of = np.full(db.n_items, -1, np.int32)
+            row_of[self.freq_items] = np.arange(self.freq_items.size, dtype=np.int32)
+            keep = row_of[item] >= 0
+            sess, pos, item = sess[keep], pos[keep], item[keep]
+            bits = np.zeros(
+                (self.freq_items.size, self.n_sessions, self.n_words), np.uint32
+            )
+            word, bit = pos // _WORD, pos % _WORD
+            np.bitwise_or.at(
+                bits,
+                (row_of[item], sess, word),
+                (np.uint32(1) << bit.astype(np.uint32)),
+            )
+            self._row_of = row_of
+        else:
+            self.freq_items = np.zeros((0,), np.int32)
+            self.freq_support = np.zeros((0,), np.int64)
+            self._row_of = np.full(db.n_items, -1, np.int32)
+            bits = np.zeros((0, self.n_sessions, self.n_words), np.uint32)
+        self.bits = bits
+
+    def row(self, item_id: int) -> int:
+        r = int(self._row_of[item_id])
+        if r < 0:
+            raise KeyError(f"item {item_id} is not frequent")
+        return r
+
+    # -- primitive ops ------------------------------------------------------
+    @staticmethod
+    def shift1(b: np.ndarray) -> np.ndarray:
+        """Move every set bit one position later (possible extension slots
+        for maxgap=1).  Works on (..., n_words)."""
+        carry = np.zeros_like(b)
+        carry[..., 1:] = b[..., :-1] >> np.uint32(31)
+        return ((b << np.uint32(1)) | carry).astype(np.uint32)
+
+    @classmethod
+    def smear_after(cls, b: np.ndarray) -> np.ndarray:
+        """Set all positions strictly after the first set bit per session
+        (SPAM's s-step transform for unconstrained gap)."""
+        x = b.copy()
+        for k in (1, 2, 4, 8, 16):  # within-word smear toward higher bits
+            x |= x << np.uint32(k)
+        after = cls.shift1(x)
+        # any earlier word nonzero -> whole word saturates
+        nz = (b != 0).astype(np.uint32)
+        earlier = np.cumsum(nz, axis=-1) - nz  # count of nonzero earlier words
+        after[earlier > 0] = np.uint32(0xFFFFFFFF)
+        return after
+
+    def extension_slots(self, b: np.ndarray, maxgap: Optional[int]) -> np.ndarray:
+        if maxgap is None:
+            return self.smear_after(b)
+        out = self.shift1(b)
+        acc = out
+        for _ in range(maxgap - 1):
+            acc = self.shift1(acc)
+            out = out | acc
+        return out
+
+    @staticmethod
+    def support(b: np.ndarray) -> np.ndarray:
+        """#sessions with >=1 set bit.  (..., S, W) -> (...,)."""
+        return np.any(b != 0, axis=-1).sum(axis=-1)
+
+    # -- batched s-step join (the hot loop; kernel-accelerated) -------------
+    def sstep_join(
+        self,
+        prefix_bits: np.ndarray,
+        cand_rows: np.ndarray,
+        maxgap: Optional[int],
+        use_kernel: bool = False,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Join a prefix bitmap against candidate item bitmaps (by row).
+
+        Returns ``(joined (K,S,W), support (K,))`` where ``joined[k]`` marks
+        end positions of ``prefix + (freq_items[cand_rows[k]],)``.
+        """
+        slots = self.extension_slots(prefix_bits, maxgap)
+        cand = self.bits[cand_rows]
+        if use_kernel:
+            from repro.kernels.bitmap_support import ops as _ops
+
+            joined, sup = _ops.sstep_join_support(slots, cand)
+            return np.asarray(joined), np.asarray(sup)
+        joined = slots[None, :, :] & cand
+        return joined, self.support(joined)
+
+
+# ---------------------------------------------------------------------------
+# SPAM — DFS over vertical bitmaps, all frequent sequential patterns
+# ---------------------------------------------------------------------------
+
+
+def _dfs_mine(
+    db: SequenceDatabase, params: MiningParams, maximal_only: bool
+) -> list[Pattern]:
+    vb = VerticalBitmaps(db, params.minsup_count(len(db)))
+    msc = params.minsup_count(len(db))
+    all_rows = np.arange(vb.freq_items.size)
+    out: list[Pattern] = []
+
+    def dfs(pattern: tuple, pbits: np.ndarray, sup: int) -> None:
+        has_freq_ext = False
+        if len(pattern) < params.max_len and all_rows.size:
+            joined, sups = vb.sstep_join(
+                pbits, all_rows, params.maxgap, params.use_kernel
+            )
+            for k in np.nonzero(sups >= msc)[0]:
+                has_freq_ext = True
+                dfs(
+                    pattern + (int(vb.freq_items[k]),),
+                    joined[k],
+                    int(sups[k]),
+                )
+        if len(pattern) >= params.min_len and (not maximal_only or not has_freq_ext):
+            out.append(Pattern(pattern, int(sup)))
+
+    for r in range(vb.freq_items.size):
+        dfs((int(vb.freq_items[r]),), vb.bits[r], int(vb.freq_support[r]))
+    return out
+
+
+def spam(db: SequenceDatabase, params: MiningParams) -> list[Pattern]:
+    return _dfs_mine(db, params, maximal_only=False)
+
+
+# ---------------------------------------------------------------------------
+# VMSP — maximal sequential patterns (the paper's adopted algorithm)
+# ---------------------------------------------------------------------------
+
+
+def maximal_filter(
+    patterns: Sequence[Pattern], maxgap: Optional[int]
+) -> list[Pattern]:
+    """Keep patterns not strictly included in another frequent pattern.
+
+    For the contiguous case (maxgap=1) inclusion = contiguous subsequence;
+    otherwise classic subsequence inclusion.
+    """
+    if not patterns:
+        return []
+    ordered = sorted(patterns, key=len, reverse=True)
+    maximal: list[Pattern] = []
+    if maxgap == 1:
+        covered: set = set()
+        for p in ordered:
+            if p.items not in covered:
+                maximal.append(p)
+                n = len(p.items)
+                for i in range(n):
+                    for j in range(i + 1, n + 1):
+                        if (j - i) < n:
+                            covered.add(p.items[i:j])
+    else:
+        def subseq(a: tuple, b: tuple) -> bool:
+            it = iter(b)
+            return all(x in it for x in a)
+
+        for p in ordered:
+            if not any(
+                len(m.items) > len(p.items) and subseq(p.items, m.items)
+                for m in maximal
+            ):
+                maximal.append(p)
+    return maximal
+
+
+def vmsp(db: SequenceDatabase, params: MiningParams) -> list[Pattern]:
+    """VMSP-style mining: DFS with vertical bitmaps + maximality.
+
+    Non-maximal patterns are pruned during the DFS via the forward-extension
+    check (a pattern with a frequent s-extension cannot be maximal); a global
+    inclusion filter removes backward/infix containment, matching VMSP's
+    output semantics.
+    """
+    candidates = _dfs_mine(db, params, maximal_only=True)
+    return maximal_filter(candidates, params.maxgap)
+
+
+# ---------------------------------------------------------------------------
+# PrefixSpan — pattern growth with projected databases
+# ---------------------------------------------------------------------------
+
+
+def prefixspan(db: SequenceDatabase, params: MiningParams) -> list[Pattern]:
+    msc = params.minsup_count(len(db))
+    sessions = db.sessions
+    out: list[Pattern] = []
+
+    # initial projection: item -> list of (session, end_position)
+    first: dict = {}
+    for sid, seq in enumerate(sessions):
+        for pos, it in enumerate(seq):
+            first.setdefault(it, []).append((sid, pos))
+
+    def proj_support(proj: list) -> int:
+        return len({sid for sid, _ in proj})
+
+    def grow(pattern: tuple, proj: list) -> None:
+        if len(pattern) >= params.min_len:
+            out.append(Pattern(pattern, proj_support(proj)))
+        if len(pattern) >= params.max_len:
+            return
+        nxt: dict = {}
+        for sid, pos in proj:
+            seq = sessions[sid]
+            if params.maxgap is None:
+                rng = range(pos + 1, len(seq))
+            else:
+                rng = range(pos + 1, min(pos + 1 + params.maxgap, len(seq)))
+            for q in rng:
+                nxt.setdefault(seq[q], []).append((sid, q))
+        for it, p in nxt.items():
+            if proj_support(p) >= msc:
+                grow(pattern + (it,), p)
+
+    for it, proj in first.items():
+        if proj_support(proj) >= msc:
+            grow((it,), proj)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GSP — Apriori BFS candidate generation
+# ---------------------------------------------------------------------------
+
+
+def gsp(db: SequenceDatabase, params: MiningParams) -> list[Pattern]:
+    vb = VerticalBitmaps(db, params.minsup_count(len(db)))
+    msc = params.minsup_count(len(db))
+    level = {
+        (int(vb.freq_items[r]),): (vb.bits[r], int(vb.freq_support[r]))
+        for r in range(vb.freq_items.size)
+    }
+    out: list[Pattern] = []
+    length = 1
+    while level and length < params.max_len:
+        # candidate generation: join p, q with p[1:] == q[:-1]
+        # (keying by each pattern's prefix makes the apriori check — the
+        # candidate's suffix pat[1:]+(t,) is frequent — hold by construction)
+        by_prefix: dict = {}
+        for pat in level:
+            by_prefix.setdefault(pat[:-1], []).append(pat)
+        nxt: dict = {}
+        for pat, (pbits, _) in level.items():
+            tails = [q[-1] for q in by_prefix.get(pat[1:], [])]
+            for t in dict.fromkeys(tails):
+                cand = pat + (t,)
+                if cand in nxt:
+                    continue
+                joined, sup = vb.sstep_join(
+                    pbits,
+                    np.array([vb.row(t)]),
+                    params.maxgap,
+                    params.use_kernel,
+                )
+                if sup[0] >= msc:
+                    nxt[cand] = (joined[0], int(sup[0]))
+        length += 1
+        level = nxt
+        for pat, (_, sup) in level.items():
+            if params.min_len <= len(pat) <= params.max_len:
+                out.append(Pattern(pat, sup))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Oracle + dispatch + dynamic minsup
+# ---------------------------------------------------------------------------
+
+
+def brute_force(db: SequenceDatabase, params: MiningParams) -> list[Pattern]:
+    """Exhaustive window/subsequence counter — the test oracle."""
+    counts: dict = {}
+    for seq in db.sessions:
+        seen: set = set()
+        if params.maxgap == 1:
+            for i in range(len(seq)):
+                for j in range(
+                    i + params.min_len, min(i + params.max_len, len(seq)) + 1
+                ):
+                    seen.add(seq[i:j])
+        else:
+            def expand(path: tuple, pos: int) -> None:
+                if len(path) >= params.min_len:
+                    seen.add(path)
+                if len(path) >= params.max_len:
+                    return
+                hi = len(seq) if params.maxgap is None else min(
+                    pos + 1 + params.maxgap, len(seq)
+                )
+                for q in range(pos + 1, hi):
+                    expand(path + (seq[q],), q)
+
+            for p0 in range(len(seq)):
+                expand((seq[p0],), p0)
+        for s in seen:
+            counts[s] = counts.get(s, 0) + 1
+    msc = params.minsup_count(len(db))
+    return [Pattern(k, v) for k, v in counts.items() if v >= msc]
+
+
+ALGORITHMS: dict[str, Callable] = {
+    "gsp": gsp,
+    "spam": spam,
+    "prefixspan": prefixspan,
+    "vmsp": vmsp,
+}
+
+
+def mine(db: SequenceDatabase, params: MiningParams, algo: str = "vmsp") -> list[Pattern]:
+    return ALGORITHMS[algo](db, params)
+
+
+def mine_dynamic_minsup(
+    db: SequenceDatabase,
+    params: MiningParams,
+    algo: str = "vmsp",
+    start: float = 0.5,
+    floor: float = 0.01,
+    decay: float = 0.5,
+    min_patterns: int = 16,
+) -> tuple[list[Pattern], float]:
+    """Paper §4.2: start with a high minsup and decay it until enough
+    frequent sequences are discovered.  Returns (patterns, used_minsup)."""
+    minsup = start
+    patterns: list[Pattern] = []
+    while True:
+        patterns = mine(db, dataclasses.replace(params, minsup=minsup), algo)
+        if len(patterns) >= min_patterns or minsup <= floor:
+            return patterns, minsup
+        minsup = max(floor, minsup * decay)

@@ -1,0 +1,299 @@
+"""PALPATINE client facade (paper §4.1 work flow, steps a..m).
+
+``PalpatineClient`` wraps the DKV store client API unchanged (transparent to
+applications): reads are intercepted by the Controller, logged by Monitoring,
+served from the two-space cache when possible, and trigger background
+prefetching driven by the probabilistic trees.  ``BaselineClient`` is the
+unmodified client (direct store access), used as the paper's baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+from .backstore import Clock, SimulatedDKVStore
+from .cache import TwoSpaceCache
+from .heuristics import HeuristicConfig, PrefetchEngine
+from .metastore import PatternMetastore
+from .mining import MiningParams, mine, mine_dynamic_minsup
+from .ptree import PTreeIndex
+from .sessions import AccessLogger
+
+__all__ = ["PalpatineConfig", "PalpatineClient", "BaselineClient"]
+
+#: cache bookkeeping cost per request (in-memory hash + LRU on the paper's
+#: 3.4 GHz Xeon) — what a cache hit costs instead of a network round trip.
+CACHE_OVERHEAD = 2e-6
+
+
+@dataclasses.dataclass
+class PalpatineConfig:
+    heuristic: HeuristicConfig = dataclasses.field(default_factory=HeuristicConfig)
+    cache_bytes: int = 32 * 1024 * 1024          # paper default working point
+    preemptive_frac: float = 0.10
+    mining: MiningParams = dataclasses.field(default_factory=MiningParams)
+    algo: str = "vmsp"
+    metastore_capacity: int = 10_000
+    session_gap: float = 1.0                      # virtual seconds
+    prefetch_batch: int = 16                      # per-table batching (§4.5)
+    prefetch_enabled: bool = True
+    # timeliness/efficiency guards (paper §1: prefetching must be timely,
+    # useful, efficient): a read racing an in-flight prefetch falls back to
+    # a demand fetch beyond this wait; prefetch batches are dropped when
+    # the background channel is backlogged (bounded I/O amplification)
+    prefetch_wait_cap: float = 2e-3
+    backlog_cap: float = 0.05
+    # hybrid container mining (paper §3.1 pattern type 1): additionally
+    # mine COLUMN-level containers (table, column) generalized across rows;
+    # predictions are instantiated with the triggering request's row
+    # ("a sequence of table and columns that are accessed for a given row")
+    column_mining: bool = False
+    # online mining (§4.2): re-mine every N logged operations (None = offline)
+    online_mine_every: Optional[int] = None
+    online_tail_sessions: int = 2_000             # mine recent chunk only
+    dynamic_minsup_start: float = 0.5
+    dynamic_minsup_floor: float = 0.01
+    min_patterns: int = 16
+
+
+class PalpatineClient:
+    """Drop-in DKV client with monitoring, mining, prefetching and caching."""
+
+    def __init__(self, store: SimulatedDKVStore, config: Optional[PalpatineConfig] = None,
+                 clock: Optional[Clock] = None):
+        self.store = store
+        self.cfg = config or PalpatineConfig()
+        self.clock = clock or Clock()
+        self.cache = TwoSpaceCache(self.cfg.cache_bytes, self.cfg.preemptive_frac)
+        self.logger = AccessLogger(self.cfg.session_gap)
+        self.metastore = PatternMetastore(self.cfg.metastore_capacity,
+                                          self.cfg.mining.max_len)
+        self.engine = PrefetchEngine(PTreeIndex.build([]), self.cfg.heuristic)
+        self.col_logger = AccessLogger(self.cfg.session_gap)
+        # column patterns are instantiated with the *current* request's row,
+        # so they are always walked progressively (one confirmed step ->
+        # next level), regardless of the main heuristic
+        self.col_engine = PrefetchEngine(
+            PTreeIndex.build([]),
+            HeuristicConfig("fetch_progressive", progressive_depth=2))
+        self._ops_since_mine = 0
+        self.mining_runs = 0
+        self.mining_wall_time = 0.0
+        store.watch(self._on_store_write)
+        self._in_write = False
+
+    # ------------------------------------------------------------------
+    # Client API (mirrors the store's get/put — transparent, §4.5)
+    # ------------------------------------------------------------------
+    def read(self, container) -> tuple[Any, float]:
+        """Returns (value, virtual latency).  Advances the virtual clock."""
+        now = self.clock.now
+        self.logger.record(now, container)
+        iid = self.logger.db.item_id(container)
+        if self.cfg.column_mining:
+            self.col_logger.record(now, self._generalize(container))
+
+        hit = self.cache.lookup(iid, now)
+        if hit is not None and hit[1] <= self.cfg.prefetch_wait_cap:
+            value, wait = hit
+            latency = CACHE_OVERHEAD + wait
+        else:
+            # miss, or the prefetch is too far in flight: demand-fetch wins
+            # the race (timeliness failure, counted against precision by
+            # the still-pending preemptive entry)
+            value, latency = self.store.get(self._store_key(container))
+            latency += CACHE_OVERHEAD
+            if value is not None:
+                self.cache.put_demand(iid, value, len(value))
+
+        if self.cfg.prefetch_enabled:
+            self._prefetch(iid, now)
+            if self.cfg.column_mining:
+                self._prefetch_columns(container, now)
+        self._maybe_online_mine()
+        self.clock.advance(latency)
+        return value, latency
+
+    def write(self, container, value: bytes) -> float:
+        """Write-through cache update + async store write (§4.4); returns
+        the (small) foreground latency."""
+        now = self.clock.now
+        iid = self.logger.db.item_id(container)
+        self._in_write = True
+        try:
+            self.store.put(self._store_key(container), value, now)
+        finally:
+            self._in_write = False
+        self.cache.write(iid, value, len(value))
+        self.clock.advance(CACHE_OVERHEAD)
+        return CACHE_OVERHEAD
+
+    def end_session(self) -> None:
+        """Explicit session cut (end of a transaction/request)."""
+        self.logger.flush_session()
+        self.col_logger.flush_session()
+
+    # ------------------------------------------------------------------
+    # Mining control (stage 1 -> stage 2 in the benchmarks)
+    # ------------------------------------------------------------------
+    def mine_now(self, use_dynamic_minsup: bool = True) -> int:
+        """Run the Data Mining Engine on the backlog, furnish the metastore,
+        rebuild the probabilistic trees.  Returns #patterns stored."""
+        if self.cfg.column_mining:
+            self._mine_columns(use_dynamic_minsup)
+        db = self.logger.snapshot()
+        if self.cfg.online_mine_every is not None:
+            db = db.tail(self.cfg.online_tail_sessions)
+        t0 = time.perf_counter()
+        if use_dynamic_minsup:
+            patterns, _ = mine_dynamic_minsup(
+                db, self.cfg.mining, self.cfg.algo,
+                start=self.cfg.dynamic_minsup_start,
+                floor=self.cfg.dynamic_minsup_floor,
+                min_patterns=self.cfg.min_patterns,
+            )
+        else:
+            patterns = mine(db, self.cfg.mining, self.cfg.algo)
+        self.mining_wall_time += time.perf_counter() - t0
+        self.mining_runs += 1
+        # a sequence observed once is not a pattern: support >= 2 sessions
+        patterns = [p for p in patterns if p.support >= 2]
+        self.metastore.populate(patterns)
+        self.engine.replace_index(PTreeIndex.build(self.metastore))
+        return len(self.metastore)
+
+    def _maybe_online_mine(self) -> None:
+        if self.cfg.online_mine_every is None:
+            return
+        self._ops_since_mine += 1
+        if self._ops_since_mine >= self.cfg.online_mine_every:
+            self._ops_since_mine = 0
+            self.mine_now()
+
+    # ------------------------------------------------------------------
+    # Hybrid column-level mining (paper §3.1 type 1)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _generalize(container):
+        key = container.key() if hasattr(container, "key") else container
+        if isinstance(key, tuple) and len(key) == 3:
+            return (key[0], None, key[2])     # (table, *, column)
+        return key
+
+    def _mine_columns(self, use_dynamic_minsup: bool = True) -> None:
+        db = self.col_logger.snapshot()
+        if self.cfg.online_mine_every is not None:
+            db = db.tail(self.cfg.online_tail_sessions)
+        floor = max(self.cfg.dynamic_minsup_floor, 2.0 / max(len(db), 1))
+        if use_dynamic_minsup:
+            patterns, _ = mine_dynamic_minsup(
+                db, self.cfg.mining, self.cfg.algo,
+                start=self.cfg.dynamic_minsup_start,
+                floor=floor,
+                min_patterns=self.cfg.min_patterns)
+        else:
+            patterns = mine(db, self.cfg.mining, self.cfg.algo)
+        patterns = [p for p in patterns if p.support >= 2]
+        ms = PatternMetastore(self.cfg.metastore_capacity,
+                              self.cfg.mining.max_len)
+        ms.populate(patterns)
+        self.col_metastore = ms
+        self.col_engine.replace_index(PTreeIndex.build(ms))
+
+    def _prefetch_columns(self, container, now: float) -> None:
+        """Instantiate predicted (table, column) containers with the
+        triggering request's row and prefetch the concrete cells."""
+        key = container.key() if hasattr(container, "key") else container
+        if not (isinstance(key, tuple) and len(key) == 3):
+            return
+        row = key[1]
+        gen_iid = self.col_logger.db.item_id(self._generalize(container))
+        targets = self.col_engine.on_request(gen_iid)
+        if not targets:
+            return
+        if self.store.background_free_at - now > self.cfg.backlog_cap:
+            return
+        concrete = []
+        for t in targets:
+            table, _, col = self.col_logger.db.item(t)
+            ckey = (table, row, col)
+            if ckey not in self.store.data:
+                continue
+            iid = self.logger.db.item_id(ckey)
+            if not self.cache.contains(iid):
+                concrete.append((iid, ckey))
+        for i in range(0, len(concrete), self.cfg.prefetch_batch):
+            batch = concrete[i:i + self.cfg.prefetch_batch]
+            keys = [k for _, k in batch]
+            vals, done_at = self.store.background_get(keys, now)
+            for (iid, _), v in zip(batch, vals):
+                if v is not None:
+                    self.cache.put_prefetch(iid, v, len(v), done_at)
+
+    # ------------------------------------------------------------------
+    # Prefetching (background, §4.1 step j / §4.5 batching)
+    # ------------------------------------------------------------------
+    def _prefetch(self, iid: int, now: float) -> None:
+        if self.store.background_free_at - now > self.cfg.backlog_cap:
+            return  # background channel saturated: shed prefetch load
+        wanted = [i for i in self.engine.on_request(iid)
+                  if not self.cache.contains(i)]
+        if not wanted:
+            return
+        # First wave item goes unbatched (anticipate the next request,
+        # §4.5); the rest batched per prefetch_batch.
+        batches = [wanted[:1]]
+        rest = wanted[1:]
+        for i in range(0, len(rest), self.cfg.prefetch_batch):
+            batches.append(rest[i:i + self.cfg.prefetch_batch])
+        for batch in batches:
+            if not batch:
+                continue
+            keys = [self._store_key_by_id(i) for i in batch]
+            vals, done_at = self.store.background_get(keys, now)
+            for i, v in zip(batch, vals):
+                if v is not None:
+                    self.cache.put_prefetch(i, v, len(v), done_at)
+
+    # ------------------------------------------------------------------
+    def _store_key(self, container):
+        return container.key() if hasattr(container, "key") else container
+
+    def _store_key_by_id(self, iid: int):
+        return self.logger.db.item(iid)
+
+    def _on_store_write(self, key) -> None:
+        """Coherence: the store-side monitor notifies on writes.  Our own
+        writes update the cache in place; external writers invalidate."""
+        if self._in_write:
+            return
+        vocab = self.logger.db._vocab
+        iid = vocab.get(key)
+        if iid is not None:
+            self.cache.invalidate(iid)
+
+    @property
+    def stats(self):
+        return self.cache.stats
+
+
+class BaselineClient:
+    """The unmodified DKV client: every read is a store round trip."""
+
+    def __init__(self, store: SimulatedDKVStore, clock: Optional[Clock] = None):
+        self.store = store
+        self.clock = clock or Clock()
+
+    def read(self, container) -> tuple[Any, float]:
+        key = container.key() if hasattr(container, "key") else container
+        value, latency = self.store.get(key)
+        self.clock.advance(latency)
+        return value, latency
+
+    def write(self, container, value: bytes) -> float:
+        key = container.key() if hasattr(container, "key") else container
+        self.store.put(key, value, self.clock.now)
+        self.clock.advance(CACHE_OVERHEAD)
+        return CACHE_OVERHEAD

@@ -1,0 +1,139 @@
+"""Probabilistic trees (Palpatine §4.2, Figure 3).
+
+The metastore's frequent sequences are compiled into a forest of
+probabilistic trees (akin to Markov chains): node = accessed item, edge =
+transition with a probability estimated from observed sequence frequencies.
+One tree per distinct first item; roots are indexed by item so a client
+request can be matched in O(1).
+
+Node probabilities:
+  * ``prob``     — conditional: P(child | parent reached), normalized over
+                   siblings by pattern support mass.
+  * ``cum_prob`` — cumulative from the root: probability the item is
+                   requested when starting from the root (used by the
+                   fetch-top-n heuristic, level-order + probability-wise).
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Iterable, Iterator, Optional
+
+from .mining import Pattern
+
+__all__ = ["PNode", "PTree", "PTreeIndex"]
+
+
+class PNode:
+    __slots__ = ("item", "weight", "prob", "cum_prob", "depth", "children", "parent")
+
+    def __init__(self, item: int, depth: int, parent: Optional["PNode"]):
+        self.item = item
+        self.weight = 0.0      # support mass flowing through this node
+        self.prob = 1.0        # P(this | parent)
+        self.cum_prob = 1.0    # P(this | root)
+        self.depth = depth
+        self.children: dict[int, PNode] = {}
+        self.parent = parent
+
+    def level_order(self) -> Iterator["PNode"]:
+        queue = [self]
+        while queue:
+            node = queue.pop(0)
+            yield node
+            queue.extend(node.children.values())
+
+    def __repr__(self) -> str:
+        return f"PNode({self.item}, p={self.prob:.2f}, cp={self.cum_prob:.2f})"
+
+
+class PTree:
+    """A tree rooted at one first-item; paths are mined frequent sequences."""
+
+    def __init__(self, root_item: int):
+        self.root = PNode(root_item, depth=0, parent=None)
+        self.max_depth = 0
+
+    def insert(self, items: tuple, support: int) -> None:
+        assert items[0] == self.root.item
+        node = self.root
+        node.weight += support
+        for it in items[1:]:
+            child = node.children.get(it)
+            if child is None:
+                child = PNode(it, node.depth + 1, node)
+                node.children[it] = child
+            child.weight += support
+            node = child
+        self.max_depth = max(self.max_depth, len(items) - 1)
+
+    def finalize(self) -> None:
+        """Normalize sibling weights into conditional + cumulative probs."""
+        for node in self.root.level_order():
+            total = sum(c.weight for c in node.children.values())
+            for c in node.children.values():
+                c.prob = (c.weight / total) if total > 0 else 0.0
+                c.cum_prob = node.cum_prob * c.prob
+
+    # -- queries used by the heuristics --------------------------------
+    def nodes_below(self) -> Iterator[PNode]:
+        """All non-root nodes, level order."""
+        it = self.root.level_order()
+        next(it)  # skip root
+        return it
+
+    def top_n_cumulative(self, n: int) -> list[PNode]:
+        """The n non-root nodes with highest cumulative probability,
+        returned level-order first, probability-wise second (paper §4.5)."""
+        best = heapq.nlargest(
+            n, self.nodes_below(), key=lambda nd: (nd.cum_prob, -nd.depth)
+        )
+        return sorted(best, key=lambda nd: (nd.depth, -nd.cum_prob))
+
+    def levels(self, lo: int, hi: int) -> list[PNode]:
+        """Nodes with lo <= depth <= hi, level order."""
+        return [nd for nd in self.nodes_below() if lo <= nd.depth <= hi]
+
+    def walk(self, path: tuple) -> Optional[PNode]:
+        """Follow ``path`` (item ids, starting at the root item) down the
+        tree; None if it diverges."""
+        if not path or path[0] != self.root.item:
+            return None
+        node = self.root
+        for it in path[1:]:
+            node = node.children.get(it)
+            if node is None:
+                return None
+        return node
+
+    def size(self) -> int:
+        return sum(1 for _ in self.root.level_order())
+
+
+class PTreeIndex:
+    """Hash table of trees keyed by the first item of the frequent sequences
+    (paper §4.5: 'hash tables of trees whose keys represent the first items').
+    """
+
+    def __init__(self):
+        self.trees: dict[int, PTree] = {}
+
+    @classmethod
+    def build(cls, patterns: Iterable[Pattern]) -> "PTreeIndex":
+        idx = cls()
+        for p in patterns:
+            if not p.items:
+                continue
+            tree = idx.trees.get(p.items[0])
+            if tree is None:
+                tree = idx.trees[p.items[0]] = PTree(p.items[0])
+            tree.insert(p.items, p.support)
+        for tree in idx.trees.values():
+            tree.finalize()
+        return idx
+
+    def match_root(self, item: int) -> Optional[PTree]:
+        return self.trees.get(item)
+
+    def __len__(self) -> int:
+        return len(self.trees)

@@ -1,0 +1,4 @@
+"""Data substrate: deterministic restartable token pipeline."""
+from .pipeline import DataConfig, TokenPipeline
+
+__all__ = ["DataConfig", "TokenPipeline"]

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: VMSP s-step join + per-session support count.
+
+The mining hot loop (paper §3.2: candidate support counting dominates
+sequential-pattern-mining runtime) is a bitwise AND of a prefix's extension
+slots against every candidate item's occurrence bitmap, followed by an
+"any bit set per session" reduction.
+
+TPU adaptation: the sequence database's vertical bitmaps are laid out
+(K candidates, S sessions, W packed words).  The kernel tiles (K, S) into
+VMEM blocks — the whole word dimension rides along (W is small: sessions
+are ≤ W·32 accesses) — and runs the AND + reduce on the VPU.  The support
+accumulator is carried across the sequential S-tile grid dimension in the
+output block (revisited blocks accumulate), the standard Pallas reduction
+pattern.
+
+Blocks default to (8 candidates × 512 sessions × W words): one uint32 tile
+is 8·512·W·4 B = 16 KiB·W, three live blocks ≈ 48·W KiB ≪ VMEM, and both
+tile dims are multiples of the (8, 128) VPU lane grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["sstep_join_support_pallas"]
+
+DEFAULT_BLOCK_K = 8
+DEFAULT_BLOCK_S = 512
+
+
+def _kernel(slots_ref, cand_ref, joined_ref, support_ref):
+    s_idx = pl.program_id(1)
+    slots = slots_ref[...]                      # (bS, W) uint32
+    cand = cand_ref[...]                        # (bK, bS, W) uint32
+    joined = jnp.bitwise_and(slots[None, :, :], cand)
+    joined_ref[...] = joined
+    any_bit = jnp.any(joined != 0, axis=-1)     # (bK, bS)
+    counts = jnp.sum(any_bit.astype(jnp.int32), axis=-1, keepdims=True)  # (bK,1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        support_ref[...] = counts
+
+    @pl.when(s_idx != 0)
+    def _acc():
+        support_ref[...] += counts
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_k", "block_s", "interpret")
+)
+def sstep_join_support_pallas(
+    slots: jnp.ndarray,
+    cand: jnp.ndarray,
+    *,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_s: int = DEFAULT_BLOCK_S,
+    interpret: bool = False,
+):
+    """See :func:`repro.kernels.bitmap_support.ref.sstep_join_support`.
+
+    Inputs must be pre-padded: K % block_k == 0 and S % block_s == 0
+    (the ops.py wrapper pads and unpads).
+    """
+    k_items, n_sessions, n_words = cand.shape
+    assert slots.shape == (n_sessions, n_words)
+    assert k_items % block_k == 0 and n_sessions % block_s == 0
+    grid = (k_items // block_k, n_sessions // block_s)
+
+    joined, support = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_s, n_words), lambda k, s: (s, 0)),
+            pl.BlockSpec((block_k, block_s, n_words), lambda k, s: (k, s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_k, block_s, n_words), lambda k, s: (k, s, 0)),
+            # revisited across the s grid dim -> accumulates
+            pl.BlockSpec((block_k, 1), lambda k, s: (k, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k_items, n_sessions, n_words), jnp.uint32),
+            jax.ShapeDtypeStruct((k_items, 1), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(slots, cand)
+    return joined, support[:, 0]

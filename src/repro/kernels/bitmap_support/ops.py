@@ -1,0 +1,56 @@
+"""Jit'd public wrapper for the bitmap support kernel.
+
+Pads (K, S) to block multiples, dispatches to the Pallas kernel (interpret
+mode on CPU hosts, compiled on TPU), and unpads.  ``sstep_join_support`` is
+the entry point :mod:`repro.core.mining` uses when ``use_kernel=True``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bitmap_support import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_S,
+    sstep_join_support_pallas,
+)
+
+__all__ = ["sstep_join_support"]
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def sstep_join_support(
+    slots,
+    cand,
+    *,
+    block_k: int | None = None,
+    block_s: int | None = None,
+    interpret: bool | None = None,
+):
+    """(S, W) × (K, S, W) -> joined (K, S, W), support (K,) int32."""
+    slots = jnp.asarray(slots, jnp.uint32)
+    cand = jnp.asarray(cand, jnp.uint32)
+    k_items, n_sessions, _ = cand.shape
+    if k_items == 0:
+        return cand, jnp.zeros((0,), jnp.int32)
+    bk = block_k or min(DEFAULT_BLOCK_K, max(1, k_items))
+    bs = block_s or DEFAULT_BLOCK_S
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    slots_p = _pad_to(slots, 0, bs)
+    cand_p = _pad_to(_pad_to(cand, 1, bs), 0, bk)
+    joined, support = sstep_join_support_pallas(
+        slots_p, cand_p, block_k=bk, block_s=bs, interpret=interpret
+    )
+    return joined[:k_items, :n_sessions], support[:k_items]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the VMSP s-step join + support count."""
+
+import jax.numpy as jnp
+
+__all__ = ["sstep_join_support"]
+
+
+def sstep_join_support(slots: jnp.ndarray, cand: jnp.ndarray):
+    """Join extension slots against candidate item bitmaps.
+
+    Args:
+      slots: (S, W) uint32 — positions where the prefix may be extended
+             (already shifted by the gap rule).
+      cand:  (K, S, W) uint32 — per-candidate-item occurrence bitmaps.
+
+    Returns:
+      joined:  (K, S, W) uint32 — end positions of prefix+item.
+      support: (K,) int32 — #sessions with >=1 occurrence per candidate.
+    """
+    joined = jnp.bitwise_and(slots[None, :, :], cand)
+    any_bit = jnp.any(joined != 0, axis=-1)          # (K, S)
+    support = jnp.sum(any_bit.astype(jnp.int32), axis=-1)
+    return joined, support

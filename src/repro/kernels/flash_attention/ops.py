@@ -1,0 +1,61 @@
+"""Jit'd public wrapper for the flash attention kernel.
+
+Pads sequence lengths up to block multiples; the kernel masks padded kv
+columns itself via the static true lengths, so padding is always safe for
+both causal and non-causal attention.  On CPU hosts runs in interpret mode;
+on TPU it compiles to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_Q,
+    flash_attention_pallas,
+)
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int | None = None,
+    block_k: int | None = None,
+    interpret: bool | None = None,
+):
+    """q: (B, Hq, Lq, D); k/v: (B, Hkv, Lk, D) -> (B, Hq, Lq, D)."""
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    bq = min(block_q or DEFAULT_BLOCK_Q, _pow2_at_most(lq))
+    bk = min(block_k or DEFAULT_BLOCK_K, _pow2_at_most(lk))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    pq = (-lq) % bq
+    pk = (-lk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, sm_scale=sm_scale,
+        block_q=bq, block_k=bk, q_valid=lq, kv_valid=lk,
+        interpret=interpret,
+    )
+    return out[:, :, :lq, :]
+
+
+def _pow2_at_most(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p

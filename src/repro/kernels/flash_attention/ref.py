@@ -1,0 +1,37 @@
+"""Pure-jnp oracle: GQA scaled-dot-product attention (optionally causal)."""
+
+import jax.numpy as jnp
+
+__all__ = ["gqa_attention"]
+
+
+def gqa_attention(q, k, v, *, causal: bool = True, sm_scale: float | None = None):
+    """Reference attention.
+
+    Args:
+      q: (B, Hq, Lq, D)
+      k, v: (B, Hkv, Lk, D) with Hq % Hkv == 0 (GQA)
+      causal: apply the causal mask aligned to the *end* of the kv sequence
+        (so Lq == Lk covers training/prefill; Lq < Lk covers decode with a
+        prefix cache).
+
+    Returns: (B, Hq, Lq, D), same dtype as q.
+    """
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * sm_scale
+    if causal:
+        qpos = jnp.arange(lq)[:, None] + (lk - lq)  # align ends
+        kpos = jnp.arange(lk)[None, :]
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,82 @@
+"""Render the §Dry-run / §Roofline tables for EXPERIMENTS.md from the
+dry-run JSON results.
+
+  PYTHONPATH=src python -m repro.launch.report results/dryrun [results/dryrun_opt]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def load(outdir):
+    cells = {}
+    for f in sorted(Path(outdir).glob("*.json")):
+        r = json.loads(f.read_text())
+        cells[(r["arch"], r["shape"], r["mesh"])] = r
+    return cells
+
+
+def fmt_table(cells, mesh="pod16x16"):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "roofline frac | useful (6ND/HLO) | peak GB/dev | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, m), r in sorted(cells.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | skipped | — | — "
+                         f"| — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | ERROR: {r['error'][:60]} |"
+                         + " — |" * 8)
+            continue
+        t = r["roofline"]
+        gb = r["memory"].get("peak_live_bytes_per_device", 0) / 1e9
+        fits = "yes" if r["memory"].get("fits_16gb_hbm") else "no"
+        lines.append(
+            f"| {arch} | {shape} | {t['compute_s']:.4f} | {t['memory_s']:.4f}"
+            f" | {t['collective_s']:.4f} | {t['dominant']} |"
+            f" {t['roofline_fraction']:.3f} | {t['useful_ratio']:.2f} |"
+            f" {gb:.1f} | {fits} |")
+    return "\n".join(lines)
+
+
+def fmt_dryrun_summary(cells):
+    ok = sum(1 for r in cells.values() if r["status"] == "ok")
+    skip = sum(1 for r in cells.values() if r["status"] == "skipped")
+    err = sum(1 for r in cells.values() if r["status"] == "error")
+    lines = [f"cells: {len(cells)} — ok {ok}, skipped {skip}, error {err}", ""]
+    lines.append("| arch | shape | mesh | compile s | arg GB/dev | "
+                 "collective ops (AG/AR/RS/A2A/CP) |")
+    lines.append("|---|---|---|---|---|---|")
+    for (arch, shape, m), r in sorted(cells.items()):
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        c = t["coll_breakdown"]["_counts"]
+        counts = (f"{c['all-gather']}/{c['all-reduce']}/"
+                  f"{c['reduce-scatter']}/{c['all-to-all']}/"
+                  f"{c['collective-permute']}")
+        arggb = r["memory"].get("argument_bytes_per_device", 0) / 1e9
+        lines.append(f"| {arch} | {shape} | {m} | {r['compile_s']} |"
+                     f" {arggb:.2f} | {counts} |")
+    return "\n".join(lines)
+
+
+def main():
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    cells = load(outdir)
+    print("## Roofline (single-pod 16x16)\n")
+    print(fmt_table(cells))
+    print("\n## Dry-run summary (both meshes)\n")
+    print(fmt_dryrun_summary(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Roofline-term extraction from AOT-compiled step functions.
+
+TPU v5e hardware constants; three terms per (arch × shape × mesh) cell:
+
+  compute    = analytic_FLOPs / (chips × peak_FLOPs)            [s]
+  memory     = analytic_HBM_bytes / (chips × HBM_bandwidth)     [s]
+  collective = collective_operand_bytes / (chips × ICI_bw)      [s]
+
+FLOPs/bytes are *analytic* (``launch/estimate.py``): XLA's
+``cost_analysis()`` counts while-loop bodies once, so a scanned N-layer
+model under-reports by ~N× — the raw XLA numbers are still recorded
+alongside for reference.  Collective bytes are parsed from the optimized
+per-device HLO with **trip-count correction**: ops inside while bodies are
+multiplied by the loop trip count (extracted from the loop condition's
+comparison constant), nested loops multiply through.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+__all__ = ["HW", "RooflineTerms", "analyze_compiled", "collective_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12      # bf16 FLOP/s per chip (TPU v5e)
+    hbm_bw: float = 819e9           # bytes/s per chip
+    ici_bw: float = 50e9            # bytes/s per link
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_COLL_RE = re.compile(
+    r"=\s*[^=]*?\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(", re.I)
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def _parse_computations(text: str) -> dict:
+    """computation name -> list of body lines."""
+    comps: dict = {}
+    current = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if current is None:
+            m = _COMP_HDR_RE.match(stripped)
+            if m and stripped.rstrip().endswith("{"):
+                current = m.group(1)
+                comps[current] = []
+        else:
+            if stripped == "}" or stripped.startswith("} "):
+                current = None
+            else:
+                comps[current].append(stripped)
+    return comps
+
+
+def _loop_multipliers(comps: dict) -> dict:
+    """computation name -> product of enclosing while trip counts."""
+    parents: dict = {}    # body comp -> (parent comp, trip)
+    for name, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                consts = [int(c) for c in _CONST_RE.findall(
+                    "\n".join(comps.get(cond, [])))]
+                trip = max(consts) if consts else 1
+                parents[body] = (name, trip)
+                parents[cond] = (name, 1)
+
+    mult: dict = {}
+
+    def resolve(name, depth=0):
+        if name in mult:
+            return mult[name]
+        if name not in parents or depth > 32:
+            mult[name] = 1
+            return 1
+        pname, trip = parents[name]
+        mult[name] = resolve(pname, depth + 1) * trip
+        return mult[name]
+
+    for name in comps:
+        resolve(name)
+    return mult
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Trip-count-corrected *operand* bytes per collective kind."""
+    comps = _parse_computations(hlo_text)
+    mult = _loop_multipliers(comps)
+    out = dict.fromkeys(_COLL_KINDS, 0)
+    counts = dict.fromkeys(_COLL_KINDS, 0)
+    for cname, lines in comps.items():
+        k = mult.get(cname, 1)
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m or "-done(" in line:
+                continue
+            kind = m.group(1).lower()
+            # result type annotations live between '=' and the op name
+            lhs = line.split("=", 1)[1].split("(", 1)[0]
+            types = _TYPE_RE.findall(lhs)
+            result = sum(_shape_bytes(d, s) for d, s in types)
+            gm = _GROUPS_RE.search(line)
+            group = int(gm.group(2)) if gm else 1
+            if kind == "all-gather":
+                operand = result // max(group, 1)
+            elif kind == "reduce-scatter":
+                operand = result * max(group, 1)
+            else:
+                operand = result
+            out[kind] += operand * k
+            counts[kind] += k
+    out["_counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_global: float                 # analytic
+    hbm_bytes_global: float             # analytic
+    coll_bytes_per_device: float        # parsed, trip-corrected
+    coll_breakdown: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    roofline_fraction: float            # compute_s / max(terms)
+    model_flops: float = 0.0            # 6·N·D convention (useful)
+    useful_ratio: float = 0.0           # model_flops / analytic flops
+    xla_flops_per_device_raw: float = 0.0   # body-once counting (reference)
+    xla_bytes_per_device_raw: float = 0.0
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze_compiled(compiled, n_chips: int, hw: HW = HW(),
+                     model_flops: float = 0.0,
+                     estimate: Optional[dict] = None) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    cbytes = float(sum(v for k, v in coll.items() if not k.startswith("_")))
+    est = estimate or {"flops": xla_flops * n_chips,
+                       "hbm_bytes": xla_bytes * n_chips}
+    compute_s = est["flops"] / (n_chips * hw.peak_flops)
+    memory_s = est["hbm_bytes"] / (n_chips * hw.hbm_bw)
+    collective_s = cbytes / hw.ici_bw   # per-device program bytes
+    dominant = max(
+        [("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)], key=lambda kv: kv[1])[0]
+    peak = max(compute_s, memory_s, collective_s, 1e-12)
+    useful = model_flops / est["flops"] if est["flops"] else 0.0
+    return RooflineTerms(
+        flops_global=est["flops"], hbm_bytes_global=est["hbm_bytes"],
+        coll_bytes_per_device=cbytes, coll_breakdown=coll,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, roofline_fraction=compute_s / peak,
+        model_flops=model_flops, useful_ratio=useful,
+        xla_flops_per_device_raw=xla_flops,
+        xla_bytes_per_device_raw=xla_bytes,
+    )

@@ -1,0 +1,20 @@
+"""LM stack: layers, attention, MoE, SSM mixers, and the per-family
+transformer assembly."""
+
+from .transformer import (
+    decode_step,
+    fill_cache,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_shapes,
+    prefill,
+)
+from .io import batch_specs, cache_specs, input_specs, make_batch
+
+__all__ = [
+    "batch_specs", "cache_specs", "decode_step", "fill_cache", "forward",
+    "init_cache", "init_params", "input_specs", "loss_fn", "make_batch",
+    "param_shapes", "prefill",
+]

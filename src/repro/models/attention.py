@@ -1,0 +1,124 @@
+"""GQA attention: init, train/prefill forward, cached decode.
+
+``impl="reference"`` uses the pure-jnp einsum path (used by the dry-run —
+XLA's native attention lowering keeps the compiled HLO analyzable);
+``impl="pallas"`` routes prefill/train through the Flash kernel
+(:mod:`repro.kernels.flash_attention`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rope
+
+__all__ = ["attn_init", "attention", "decode_attention", "init_layer_cache"]
+
+
+def attn_init(key, cfg, dtype, d_in: int | None = None):
+    d = d_in or cfg.d_model
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (d, hq * hd), dtype=dtype),
+        "wk": dense_init(kk, (d, hkv * hd), dtype=dtype),
+        "wv": dense_init(kv, (d, hkv * hd), dtype=dtype),
+        "wo": dense_init(ko, (hq * hd, d), dtype=dtype),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim)
+
+
+def attention(p, cfg, x, positions, *, causal=True, kv_x=None, use_rope=True):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    x: (B, S, D).  kv_x: source for k/v (cross-attention) or None (self).
+    Returns (out (B, S, D), (k, v) heads for cache storage).
+    """
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if kv_x is None else kv_x
+    q = _split_heads(x @ p["wq"], hq, hd)
+    k = _split_heads(src @ p["wk"], hkv, hd)
+    v = _split_heads(src @ p["wv"], hkv, hd)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        kv_pos = positions if kv_x is None else jnp.arange(src.shape[1])[None]
+        k = rope(k, kv_pos, cfg.rope_theta)
+
+    if cfg.attention_impl == "pallas" and x.shape[1] > 1:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        out = flash_attention(
+            q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+            causal=causal,
+        ).swapaxes(1, 2)
+    elif cfg.attention_impl == "blocked" and x.shape[1] > 1:
+        from .blocked_attention import blocked_attention
+
+        out = blocked_attention(q, k, v, causal=causal)
+    else:
+        out = _reference_attention(q, k, v, causal=causal)
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, hq * hd) @ p["wo"], (k, v)
+
+
+def _reference_attention(q, k, v, *, causal, kv_valid=None):
+    """q: (B, Sq, Hq, hd), k/v: (B, Sk, Hkv, hd); kv_valid: scalar (traced)
+    length of the valid cache prefix, or None."""
+    b, sq, hq, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + (sk - sq)
+        kpos = jnp.arange(sk)[None, :]
+        mask = mask & (qpos >= kpos)
+    if kv_valid is not None:
+        mask = mask & (jnp.arange(sk)[None, :] < kv_valid)
+    s = jnp.where(mask, s, -jnp.inf)  # broadcasts over (b, hkv, group)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    # (b, sq, hkv, group, hd) -> (b, sq, hq, hd): q-head index = h*group + g,
+    # matching the reshape at entry
+    return out.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def init_layer_cache(cfg, batch, max_len, dtype, n_layers=None):
+    """Stacked KV cache: (L, B, max_len, Hkv, hd) x2 + position scalar."""
+    l = n_layers if n_layers is not None else cfg.n_layers
+    shape = (l, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_attention(p, cfg, x, k_cache, v_cache, pos, *, use_rope=True):
+    """Single-step decode: x (B, 1, D); k/v_cache (B, Lmax, Hkv, hd);
+    pos: scalar int32 — number of tokens already in the cache.
+
+    Returns (out (B, 1, D), new_k_cache, new_v_cache).
+    """
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, s, _ = x.shape
+    q = _split_heads(x @ p["wq"], hq, hd)
+    k = _split_heads(x @ p["wk"], hkv, hd)
+    v = _split_heads(x @ p["wv"], hkv, hd)
+    positions = jnp.full((b, s), pos, jnp.int32)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=1)
+    out = _reference_attention(q, k_cache, v_cache, causal=False,
+                               kv_valid=pos + 1)
+    out = out.reshape(b, s, hq * hd) @ p["wo"]
+    return out, k_cache, v_cache

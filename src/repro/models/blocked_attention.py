@@ -1,0 +1,163 @@
+"""Blocked (flash-style) attention in pure JAX with a custom VJP.
+
+The XLA-native counterpart of the Pallas kernel in
+``kernels/flash_attention`` (same math, same blocking): online-softmax over
+KV blocks via ``lax.scan``, so activation memory is O(S·d) instead of the
+O(S²) score materialization of reference attention.  The custom VJP
+implements the standard flash backward — recompute per-block probabilities
+from the saved logsumexp — so *training* memory also stays O(S·d)
+(an inner-scan carry would otherwise save O(S²/block) per layer).
+
+This is the 'beyond-paper' memory-roofline optimization measured in
+EXPERIMENTS.md §Perf; on TPU the Pallas kernel takes over via
+``attention_impl='pallas'``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["blocked_attention"]
+
+_NEG_INF = float("-inf")
+
+
+def _prep(q, k, v):
+    b, sq, hq, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, hd).transpose(0, 2, 3, 1, 4)  # (b,h,g,q,d)
+    kt = k.transpose(0, 2, 1, 3)                                 # (b,h,k,d)
+    vt = v.transpose(0, 2, 1, 3)
+    # keep streams in their storage dtype; accumulate in f32 via
+    # preferred_element_type (halves the HBM working set for bf16 models)
+    return qg, kt, vt
+
+
+def _kv_blocks(kt, vt, block_k):
+    b, h, sk, hd = kt.shape
+    pad = (-sk) % block_k
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = (sk + pad) // block_k
+    kb = kt.reshape(b, h, nk, block_k, hd).transpose(2, 0, 1, 3, 4)
+    vb = vt.reshape(b, h, nk, block_k, hd).transpose(2, 0, 1, 3, 4)
+    return kb, vb, nk, pad
+
+
+def _mask_for(idx, block_k, sq, sk_real, causal, kv_valid):
+    """(sq, block_k) bool mask for kv block ``idx`` (True = attend)."""
+    kpos = idx * block_k + jnp.arange(block_k)[None, :]
+    mask = kpos < (sk_real if kv_valid is None else kv_valid)
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + (sk_real - sq)
+        mask = mask & (qpos >= kpos)
+    return mask
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _blocked_core(q, k, v, causal, block_k, sk_real, kv_valid_static):
+    out, _ = _blocked_fwd_impl(q, k, v, causal, block_k, sk_real,
+                               kv_valid_static)
+    return out
+
+
+def _blocked_fwd_impl(q, k, v, causal, block_k, sk_real, kv_valid):
+    qg, kt, vt = _prep(q, k, v)
+    b, h, g, sq, hd = qg.shape
+    scale = hd ** -0.5
+    kb, vb, nk, _ = _kv_blocks(kt, vt, block_k)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kx, vx, idx = xs
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kx,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _mask_for(idx, block_k, sq, sk_real, causal, kv_valid)
+        s = jnp.where(mask, s, _NEG_INF)
+        m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+        msafe = jnp.where(jnp.isinf(m2), 0.0, m2)
+        p = jnp.where(mask, jnp.exp(s - msafe[..., None]), 0.0)
+        alpha = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - msafe))
+        l2 = l * alpha + jnp.sum(p, axis=-1)
+        acc2 = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(vx.dtype), vx,
+            preferred_element_type=jnp.float32)
+        return (m2, l2, acc2), None
+
+    init = (jnp.full((b, h, g, sq), _NEG_INF, jnp.float32),
+            jnp.zeros((b, h, g, sq), jnp.float32),
+            jnp.zeros((b, h, g, sq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (kb, vb, jnp.arange(nk)))
+    denom = jnp.where(l == 0.0, 1.0, l)
+    out = acc / denom[..., None]
+    lse = jnp.where(l == 0.0, 0.0, m + jnp.log(denom))
+    return out, lse
+
+
+def _blocked_fwd(q, k, v, causal, block_k, sk_real, kv_valid):
+    out, lse = _blocked_fwd_impl(q, k, v, causal, block_k, sk_real, kv_valid)
+    return out, (q, k, v, out, lse)
+
+
+def _blocked_bwd(causal, block_k, sk_real, kv_valid, res, dout):
+    q, k, v, out, lse = res
+    qg, kt, vt = _prep(q, k, v)
+    b, h, g, sq, hd = qg.shape
+    scale = hd ** -0.5
+    kb, vb, nk, pad = _kv_blocks(kt, vt, block_k)
+    do = dout.astype(jnp.float32)
+    drow = jnp.sum(do * out.astype(jnp.float32), axis=-1)  # (b,h,g,q)
+
+    def body(dq, xs):
+        kx, vx, idx = xs
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kx,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _mask_for(idx, block_k, sq, sk_real, causal, kv_valid)
+        p = jnp.where(mask, jnp.exp(s - lse[..., None]), 0.0)
+        dv = jnp.einsum("bhgqk,bhgqd->bhkd", p, do,
+                        preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", do, vx,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - drow[..., None]) * scale
+        dq = dq + jnp.einsum("bhgqk,bhkd->bhgqd", ds.astype(kx.dtype), kx,
+                             preferred_element_type=jnp.float32)
+        dk = jnp.einsum("bhgqk,bhgqd->bhkd", ds.astype(qg.dtype), qg,
+                        preferred_element_type=jnp.float32)
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros(qg.shape, jnp.float32)   # accumulate grads in f32
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(
+        body, dq0, (kb, vb, jnp.arange(nk)))
+
+    def unblock(xb):
+        x = xb.transpose(1, 2, 0, 3, 4).reshape(b, h, nk * block_k, hd)
+        return x[:, :, :sk_real, :]
+
+    dk = unblock(dk_blocks).transpose(0, 2, 1, 3)
+    dv = unblock(dv_blocks).transpose(0, 2, 1, 3)
+    dq = dq.transpose(0, 3, 1, 2, 4).reshape(b, sq, h * g, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_blocked_core.defvjp(_blocked_fwd, _blocked_bwd)
+
+
+def blocked_attention(q, k, v, *, causal=True, kv_valid=None,
+                      block_k: int = 1024):
+    """q: (B, Sq, Hq, hd); k/v: (B, Sk, Hkv, hd) -> (B, Sq, Hq, hd).
+
+    kv_valid: optional static int — valid prefix length of k/v.
+    """
+    b, sq, hq, hd = q.shape
+    sk = k.shape[1]
+    block_k = min(block_k, sk)
+    out = _blocked_core(q, k, v, causal, block_k, sk, kv_valid)
+    # out: (b, hkv, g, sq, hd) -> (b, sq, hq, hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, hd)
+    return out.astype(q.dtype)

@@ -1,0 +1,76 @@
+"""Batch construction: real arrays for smoke tests / examples, and
+ShapeDtypeStruct stand-ins (``input_specs``) for the dry-run — weak-type
+correct, shardable, no device allocation."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+from . import transformer
+
+__all__ = ["make_batch", "input_specs", "batch_specs", "cache_specs"]
+
+
+def _emb_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Token-sequence length for a given total-cell seq_len (the vlm cell's
+    seq_len counts the patch prefix)."""
+    if cfg.family == "vlm":
+        return max(2, seq_len - cfg.n_patches)
+    return seq_len
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq_len: int, seed: int = 0):
+    """Real (host) arrays for a train/prefill step."""
+    rng = np.random.default_rng(seed)
+    s = text_len(cfg, seq_len)
+    out = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(batch, s)), jnp.int32)}
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.encoder_seq, cfg.d_model)),
+            _emb_dtype(cfg))
+    if cfg.family == "vlm":
+        out["patches"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.n_patches, cfg.d_model)),
+            _emb_dtype(cfg))
+    return out
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs for the train/prefill inputs of one shape cell."""
+    b = shape.global_batch
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    s = text_len(cfg, shape.seq_len)
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), _emb_dtype(cfg))
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.d_model), _emb_dtype(cfg))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Decode-cell cache stand-ins: a KV cache of seq_len tokens."""
+    return jax.eval_shape(functools.partial(
+        transformer.init_cache, cfg, shape.global_batch, shape.seq_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Everything the lowered step consumes, minus params/optimizer."""
+    specs = {"batch": batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        specs["cache"] = cache_specs(cfg, shape)
+    return specs

@@ -1,0 +1,82 @@
+"""Shared building blocks: norms, RoPE, initializers, SwiGLU MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init", "embed_init", "norm_apply", "norm_init", "rope",
+    "swiglu_mlp", "mlp_init", "gelu_mlp",
+]
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LeCun)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def norm_init(d: int, kind: str, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def norm_apply(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """Half-rotation RoPE.  x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # (..., S, 1, 1) * (half,) -> (..., S, 1, half)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)  # (..., S, 1, half)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def mlp_init(key, d: int, f: int, dtype, kind: str = "swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w1": dense_init(k1, (d, f), dtype=dtype),
+            "w3": dense_init(k2, (d, f), dtype=dtype),
+            "w2": dense_init(k3, (f, d), dtype=dtype),
+        }
+    return {
+        "w1": dense_init(k1, (d, f), dtype=dtype),
+        "w2": dense_init(k3, (f, d), dtype=dtype),
+    }
+
+
+def swiglu_mlp(p, x):
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    return h @ p["w2"]
+
+
+def gelu_mlp(p, x):
+    return jax.nn.gelu(x @ p["w1"]) @ p["w2"]

@@ -1,0 +1,340 @@
+"""Sub-quadratic sequence mixers: chunked gated linear attention substrate
+(one engine powers both xLSTM's mLSTM and Zamba2's Mamba2/SSD — both are
+gated linear recurrences), plus the recurrent sLSTM cell.
+
+Recurrence (per head):  S_t = f_t · S_{t-1} + i_t · k_t v_tᵀ,   h_t = q_t S_t
+
+TPU adaptation: the recurrence is evaluated chunkwise — within a chunk the
+contribution is a (c × c) masked MXU matmul (quadratic in the chunk length
+only), across chunks a (dk × dv) state is carried through ``lax.scan``.
+Cost O(S·c·d + S·dk·dv/c): sub-quadratic in S, MXU-friendly tiles, and the
+state fits VMEM for the decode path.  This replaces the CUDA chunk-parallel
+scan kernels of the original papers (see DESIGN.md §2).
+
+Numerics: gates live in log space; all exps are of non-positive numbers
+(log_i is clipped), accumulation in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, norm_apply, norm_init
+
+__all__ = [
+    "chunked_gla", "gla_decode_step",
+    "mlstm_init", "mlstm_apply", "mlstm_decode",
+    "slstm_init", "slstm_apply", "slstm_decode",
+    "mamba2_init", "mamba2_apply", "mamba2_decode",
+]
+
+_LOG_I_CLIP = 8.0
+
+
+# ---------------------------------------------------------------------------
+# Chunked gated linear attention substrate
+# ---------------------------------------------------------------------------
+
+
+def chunked_gla(q, k, v, log_f, log_i, chunk: int, state0=None):
+    """q/k: (B, S, H, dk); v: (B, S, H, dv); log_f/log_i: (B, S, H).
+
+    Returns (out (B, S, H, dv), final_state (B, H, dk, dv)).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    s_real = s
+    pad = (-s) % chunk
+    if pad:
+        # zero k/v leave the state untouched; log_f=0 means no decay
+        zpad = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        q, k, v, log_f, log_i = map(zpad, (q, k, v, log_f, log_i))
+        s = s + pad
+    nc = s // chunk
+    f32 = jnp.float32
+
+    def chunks(x):
+        # (B, S, ...) -> (nc, B, c, ...)
+        return x.reshape(b, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = chunks(q.astype(f32)), chunks(k.astype(f32)), chunks(v.astype(f32))
+    lf, li = chunks(log_f.astype(f32)), chunks(log_i.astype(f32))
+    li = jnp.clip(li, -_LOG_I_CLIP, _LOG_I_CLIP)
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dk, dv), f32)
+
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(state, xs):
+        qx, kx, vx, lfx, lix = xs                    # (B, c, H, d) / (B, c, H)
+        a = jnp.cumsum(lfx, axis=1)                  # inclusive decay prefix
+        ah = a.swapaxes(1, 2)                        # (B, H, c)
+        lih = lix.swapaxes(1, 2)
+        # intra-chunk: gamma_ij = A_i - A_j + log_i_j (j <= i)
+        gamma = ah[:, :, :, None] - ah[:, :, None, :] + lih[:, :, None, :]
+        scores = jnp.einsum("bihd,bjhd->bhij", qx, kx)
+        scores = jnp.where(tril, scores * jnp.exp(jnp.where(tril, gamma, 0.0)),
+                           0.0)
+        intra = jnp.einsum("bhij,bjhd->bihd", scores, vx)
+        # inter-chunk: decayed query against the carried state
+        qdec = qx * jnp.exp(a)[..., None]
+        inter = jnp.einsum("bihd,bhde->bihe", qdec, state)
+        # state update
+        a_last = a[:, -1:, :]                        # (B, 1, H)
+        kdec = kx * jnp.exp(a_last - a + lix)[..., None]
+        state = (jnp.exp(a_last[:, 0])[..., None, None] * state
+                 + jnp.einsum("bjhd,bjhe->bhde", kdec, vx))
+        return state, intra + inter
+
+    state, out = jax.lax.scan(step, state0, (qc, kc, vc, lf, li))
+    out = out.swapaxes(0, 1).reshape(b, s, h, dv)[:, :s_real]
+    return out.astype(v.dtype), state
+
+
+def gla_decode_step(state, q, k, v, log_f, log_i):
+    """Single-token recurrent step.  q/k: (B, H, dk); v: (B, H, dv);
+    log_f/log_i: (B, H).  Returns (h (B, H, dv), new_state)."""
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    li = jnp.clip(log_i.astype(f32), -_LOG_I_CLIP, _LOG_I_CLIP)
+    f = jnp.exp(log_f.astype(f32))[..., None, None]
+    i = jnp.exp(li)[..., None, None]
+    state = f * state + i * (k[..., :, None] * v[..., None, :])
+    h = jnp.einsum("bhd,bhde->bhe", q, state)
+    return h, state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM): up-proj -> matrix-memory mixer -> gated down-proj
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = 2 * d
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": norm_init(d, cfg.norm, jnp.float32),
+        "wu": dense_init(ks[0], (d, di), dtype=dtype),
+        "wz": dense_init(ks[1], (d, di), dtype=dtype),
+        "wq": dense_init(ks[2], (di, di), dtype=dtype),
+        "wk": dense_init(ks[3], (di, di), dtype=dtype),
+        "wv": dense_init(ks[4], (di, di), dtype=dtype),
+        "wi": dense_init(ks[5], (d, h), dtype=jnp.float32),
+        "wf": dense_init(ks[6], (d, h), dtype=jnp.float32),
+        "bi": jnp.zeros((h,), jnp.float32),
+        "bf": jnp.full((h,), 3.0, jnp.float32),   # open forget gates at init
+        "wo": dense_init(ks[7], (di, d), dtype=dtype),
+    }
+
+
+def _mlstm_qkv(p, cfg, x):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    di = p["wu"].shape[1]
+    dh = di // h
+    xn = norm_apply(p["ln"], x, cfg.norm)
+    u = xn @ p["wu"]
+    z = xn @ p["wz"]
+    q = (u @ p["wq"]).reshape(b, s, h, dh)
+    k = (u @ p["wk"]).reshape(b, s, h, dh) * (dh ** -0.5)
+    v = (u @ p["wv"]).reshape(b, s, h, dh)
+    xf = xn.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(xf @ p["wf"] + p["bf"])       # (B, S, H)
+    log_i = xf @ p["wi"] + p["bi"]                           # exp input gate
+    return q, k, v, log_f, log_i, z
+
+
+def _mlstm_out(p, h_mix, den, z, x):
+    # normalize by |denominator| (the xLSTM max(|n q|, 1) stabilizer)
+    h = h_mix / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    b, s = h.shape[:2]
+    h = h.reshape(b, s, -1).astype(x.dtype)
+    return x + (h * jax.nn.silu(z)) @ p["wo"]
+
+
+def mlstm_apply(p, cfg, x):
+    """x: (B, S, D) -> (B, S, D) (residual included)."""
+    q, k, v, log_f, log_i, z = _mlstm_qkv(p, cfg, x)
+    ones = jnp.ones((*v.shape[:-1], 1), v.dtype)
+    v1 = jnp.concatenate([v, ones], axis=-1)      # denominator trick
+    out, _ = chunked_gla(q, k, v1, log_f, log_i, cfg.ssm_chunk)
+    h_mix, den = out[..., :-1].astype(jnp.float32), out[..., -1].astype(jnp.float32)
+    return _mlstm_out(p, h_mix, den, z, x)
+
+
+def mlstm_decode(p, cfg, x, state):
+    """x: (B, 1, D); state: (B, H, dk, dv+1).  Returns (y, new_state)."""
+    q, k, v, log_f, log_i, z = _mlstm_qkv(p, cfg, x)
+    ones = jnp.ones((*v.shape[:-1], 1), v.dtype)
+    v1 = jnp.concatenate([v, ones], axis=-1)
+    h, state = gla_decode_step(
+        state, q[:, 0], k[:, 0], v1[:, 0], log_f[:, 0], log_i[:, 0])
+    h = h[:, None]                                 # (B, 1, H, dv+1)
+    h_mix, den = h[..., :-1], h[..., -1]
+    return _mlstm_out(p, h_mix, den, z, x), state
+
+
+def mlstm_state_shape(cfg, batch):
+    di = 2 * cfg.d_model
+    dh = di // cfg.n_heads
+    return (batch, cfg.n_heads, dh, dh + 1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM): recurrent scalar-memory cell with head-block mixing
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": norm_init(d, cfg.norm, jnp.float32),
+        "w": dense_init(ks[0], (d, 4 * d), dtype=dtype),     # z, i, f, o
+        "r": dense_init(ks[1], (h, dh, 4 * dh), dtype=dtype),  # block recurrent
+        "b": jnp.concatenate([
+            jnp.zeros((2 * d,), jnp.float32),
+            jnp.full((d,), 2.0, jnp.float32),                # forget bias
+            jnp.zeros((d,), jnp.float32),
+        ]),
+        "wo": dense_init(ks[2], (d, d), dtype=dtype),
+    }
+
+
+def _slstm_cell(p, cfg, wx_t, carry):
+    """wx_t: (B, 4D) precomputed input projection for one step."""
+    c, n, hprev = carry                            # each (B, H, dh)
+    b = wx_t.shape[0]
+    h_heads, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    rec = jnp.einsum("bhd,hde->bhe", hprev, p["r"]).reshape(b, 4 * cfg.d_model)
+    pre = (wx_t.astype(jnp.float32) + rec.astype(jnp.float32) + p["b"])
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z).reshape(b, h_heads, dh)
+    i = jnp.exp(jnp.clip(i, -_LOG_I_CLIP, _LOG_I_CLIP)).reshape(b, h_heads, dh)
+    f = jax.nn.sigmoid(f).reshape(b, h_heads, dh)
+    o = jax.nn.sigmoid(o).reshape(b, h_heads, dh)
+    c = f * c + i * z
+    n = f * n + i
+    hout = o * c / jnp.maximum(jnp.abs(n), 1.0)
+    return (c, n, hout), hout
+
+
+def slstm_apply(p, cfg, x):
+    """x: (B, S, D) -> (B, S, D) (residual included).  Sequential scan —
+    the sLSTM is not parallelizable over time (xLSTM paper §2)."""
+    bsz, s, d = x.shape
+    xn = norm_apply(p["ln"], x, cfg.norm)
+    wx = xn @ p["w"]                                # (B, S, 4D)
+    h_heads, dh = cfg.n_heads, d // cfg.n_heads
+    init = tuple(jnp.zeros((bsz, h_heads, dh), jnp.float32) for _ in range(3))
+
+    def step(carry, wx_t):
+        return _slstm_cell(p, cfg, wx_t, carry)
+
+    _, hs = jax.lax.scan(step, init, wx.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).reshape(bsz, s, d).astype(x.dtype)
+    return x + hs @ p["wo"]
+
+
+def slstm_decode(p, cfg, x, carry):
+    """x: (B, 1, D); carry: (c, n, h) each (B, H, dh)."""
+    xn = norm_apply(p["ln"], x, cfg.norm)
+    wx = (xn @ p["w"])[:, 0]
+    carry, hout = _slstm_cell(p, cfg, wx, carry)
+    b = x.shape[0]
+    hs = hout.reshape(b, 1, cfg.d_model).astype(x.dtype)
+    return x + hs @ p["wo"], carry
+
+
+def slstm_state_shape(cfg, batch):
+    return (batch, cfg.n_heads, cfg.d_model // cfg.n_heads)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (Zamba2): SSD as gated linear attention with shared B/C
+# ---------------------------------------------------------------------------
+
+_CONV_W = 4
+
+
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = 2 * d
+    n = cfg.ssm_state
+    h = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": norm_init(d, cfg.norm, jnp.float32),
+        "w_in": dense_init(ks[0], (d, 2 * di), dtype=dtype),   # u, z
+        "conv": dense_init(ks[1], (_CONV_W, di), scale=0.5, dtype=dtype),
+        "wb": dense_init(ks[2], (d, n), dtype=dtype),          # B  (-> k)
+        "wc": dense_init(ks[3], (d, n), dtype=dtype),          # C  (-> q)
+        "wdt": dense_init(ks[4], (d, h), dtype=jnp.float32),   # Δ per head
+        "bdt": jnp.full((h,), -2.0, jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),                 # per-head decay
+        "gn": norm_init(di, "rmsnorm", jnp.float32),
+        "w_out": dense_init(ks[6], (di, d), dtype=dtype),
+    }
+
+
+def _mamba2_proj(p, cfg, x, conv_state=None):
+    """Returns q, k, v, log_f, log_i, z, new_conv_state."""
+    b, s, d = x.shape
+    di = 2 * d
+    h = cfg.n_heads
+    dh = di // h
+    n = cfg.ssm_state
+    xn = norm_apply(p["ln"], x, cfg.norm)
+    uz = xn @ p["w_in"]
+    u, z = uz[..., :di], uz[..., di:]
+    # depthwise causal conv (width 4) on the u path
+    if conv_state is None:
+        upad = jnp.pad(u, ((0, 0), (_CONV_W - 1, 0), (0, 0)))
+        new_conv = upad[:, -( _CONV_W - 1):, :] if s >= 1 else None
+    else:
+        upad = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+        new_conv = upad[:, -(_CONV_W - 1):, :]
+    u = sum(upad[:, i:i + s, :] * p["conv"][i] for i in range(_CONV_W))
+    u = jax.nn.silu(u)
+    xf = xn.astype(jnp.float32)
+    dt = jax.nn.softplus(xf @ p["wdt"] + p["bdt"])             # (B, S, H)
+    log_f = -dt * jnp.exp(p["a_log"])                          # a_t = exp(-Δ·A)
+    log_i = jnp.log(dt + 1e-6)                                 # Δ scales input
+    k = (xn @ p["wb"])[:, :, None, :] * jnp.ones((1, 1, h, 1), u.dtype)
+    q = (xn @ p["wc"])[:, :, None, :] * jnp.ones((1, 1, h, 1), u.dtype)
+    v = u.reshape(b, s, h, dh)
+    return q, k, v, log_f, log_i, z, new_conv
+
+
+def _mamba2_out(p, cfg, h_mix, z, x):
+    b, s = h_mix.shape[:2]
+    hflat = h_mix.reshape(b, s, -1)
+    hflat = norm_apply(p["gn"], hflat.astype(x.dtype), "rmsnorm")
+    return x + (hflat * jax.nn.silu(z)) @ p["w_out"]
+
+
+def mamba2_apply(p, cfg, x):
+    q, k, v, log_f, log_i, z, _ = _mamba2_proj(p, cfg, x)
+    out, _ = chunked_gla(q, k, v, log_f, log_i, cfg.ssm_chunk)
+    return _mamba2_out(p, cfg, out, z, x)
+
+
+def mamba2_decode(p, cfg, x, state, conv_state):
+    """x: (B, 1, D); state: (B, H, N, dh); conv_state: (B, 3, Di)."""
+    q, k, v, log_f, log_i, z, new_conv = _mamba2_proj(p, cfg, x, conv_state)
+    h, state = gla_decode_step(
+        state, q[:, 0], k[:, 0], v[:, 0], log_f[:, 0], log_i[:, 0])
+    return _mamba2_out(p, cfg, h[:, None], z, x), state, new_conv
+
+
+def mamba2_state_shapes(cfg, batch):
+    di = 2 * cfg.d_model
+    dh = di // cfg.n_heads
+    return ((batch, cfg.n_heads, cfg.ssm_state, dh),
+            (batch, _CONV_W - 1, di))

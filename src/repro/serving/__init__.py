@@ -1,0 +1,7 @@
+"""Serving substrate: batched prefill/decode engine + the PALPATINE
+predictive expert prefetcher (the paper's technique at serving time)."""
+from .engine import ServeConfig, ServingEngine
+from .prefetcher import ExpertPrefetcher, ExpertStore, PrefetcherConfig
+
+__all__ = ["ExpertPrefetcher", "ExpertStore", "PrefetcherConfig",
+           "ServeConfig", "ServingEngine"]

@@ -1,0 +1,76 @@
+"""Batched serving engine: prefill + decode loop with sampling.
+
+The decode path is the jitted ``decode_step`` (one token across the whole
+batch, KV/state cache carried on device).  On a pod the same function is
+what the dry-run lowers with the production mesh; here it runs on the host
+devices for the runnable examples and tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, fill_cache, forward, init_cache
+
+__all__ = ["ServeConfig", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0       # 0 = greedy
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, serve_cfg: Optional[ServeConfig] = None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg or ServeConfig()
+        self._decode = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+        self._prefill = jax.jit(
+            lambda p, b, c: (forward(cfg, p, b), fill_cache(cfg, p, b, c)))
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
+
+    def generate(self, prompts: np.ndarray, new_tokens: int):
+        """prompts: (B, S) int32.  Returns (B, new_tokens) int32."""
+        b, s = prompts.shape
+        cache = init_cache(self.cfg, b, self.scfg.max_len)
+        t0 = time.perf_counter()
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        logits, cache = self._prefill(self.params, batch, cache)
+        logits = logits[:, -1:, :]
+        jax.block_until_ready(logits)
+        self.stats["prefill_s"] += time.perf_counter() - t0
+
+        key = jax.random.key(self.scfg.seed)
+        out = []
+        t0 = time.perf_counter()
+        for i in range(new_tokens):
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)
+            out.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, cache, tok)
+        jax.block_until_ready(logits)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["tokens"] += b * new_tokens
+        return np.concatenate(out, axis=1)
+
+    def _sample(self, logits, key):
+        logits = logits[:, -1, :].astype(jnp.float32)
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1)[:, None].astype(
+                jnp.int32)
+
+    @property
+    def tokens_per_s(self) -> float:
+        d = self.stats["decode_s"]
+        return self.stats["tokens"] / d if d > 0 else 0.0

@@ -1,0 +1,151 @@
+"""PALPATINE-powered predictive expert prefetching for MoE serving.
+
+This is the paper's technique integrated as a first-class framework
+feature (DESIGN.md §2): the cold tier (host DRAM / remote-pod HBM) plays
+the DKV back store, device-resident expert weights play the application
+cache, and the per-request expert-routing path — the sequence of
+``(layer, expert)`` containers each decode step touches — is the session
+stream that VMSP mines.
+
+  ExpertStore      — the back store: expert weights on host, fetched on
+                     demand (real jax.device_put, measured wall time).
+  ExpertPrefetcher — Monitoring + Mining + Metastore + ProbTrees +
+                     Heuristics + two-space cache, all from repro.core;
+                     prefetches run as async device_put (overlapped with
+                     the decode step on real hardware).
+
+The access pattern of MoE routing is exactly the paper's regime: strongly
+recurrent frequent sequences (expert affinity across layers is sticky for
+a given prompt domain) over a large key space (L × E containers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core import (
+    AccessLogger,
+    HeuristicConfig,
+    MiningParams,
+    PatternMetastore,
+    PrefetchEngine,
+    PTreeIndex,
+    TwoSpaceCache,
+    mine_dynamic_minsup,
+)
+
+__all__ = ["ExpertStore", "ExpertPrefetcher", "PrefetcherConfig"]
+
+
+class ExpertStore:
+    """Host-resident expert weights keyed by (layer, expert)."""
+
+    def __init__(self, n_layers: int, n_experts: int, d: int, f: int,
+                 dtype=np.float32, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.weights = {
+            (l, e): rng.standard_normal((d, f)).astype(dtype)
+            for l in range(n_layers) for e in range(n_experts)
+        }
+        self.n_layers, self.n_experts = n_layers, n_experts
+        self.fetches = 0
+
+    def nbytes(self, key) -> int:
+        return self.weights[key].nbytes
+
+    def fetch(self, key):
+        """Host -> device transfer (the expensive 'back store' access)."""
+        self.fetches += 1
+        return jax.device_put(self.weights[key])
+
+
+@dataclasses.dataclass
+class PrefetcherConfig:
+    heuristic: HeuristicConfig = dataclasses.field(
+        default_factory=lambda: HeuristicConfig("fetch_progressive"))
+    cache_experts: int = 16            # device-resident expert slots
+    preemptive_frac: float = 0.25
+    mining: MiningParams = dataclasses.field(
+        default_factory=lambda: MiningParams(minsup=0.05, min_len=3,
+                                             max_len=15, maxgap=1))
+    mine_every_sessions: int = 64
+    min_patterns: int = 8
+
+
+class ExpertPrefetcher:
+    """Wraps an ExpertStore with the PALPATINE pipeline."""
+
+    def __init__(self, store: ExpertStore, cfg: Optional[PrefetcherConfig] = None):
+        self.store = store
+        self.cfg = cfg or PrefetcherConfig()
+        item_bytes = next(iter(store.weights.values())).nbytes
+        self.cache = TwoSpaceCache(
+            self.cfg.cache_experts * item_bytes, self.cfg.preemptive_frac)
+        self.logger = AccessLogger(session_gap=float("inf"))  # explicit cuts
+        self.metastore = PatternMetastore(10_000, self.cfg.mining.max_len)
+        self.engine = PrefetchEngine(PTreeIndex.build([]), self.cfg.heuristic)
+        self._sessions_since_mine = 0
+        self.demand_wait_s = 0.0
+        self.prefetch_issued = 0
+
+    # -- the serving engine calls this per (layer, expert) access ---------
+    def access(self, layer: int, expert: int):
+        """Returns the device-resident expert weight, fetching on miss."""
+        key = (layer, expert)
+        self.logger.record(0.0, key)
+        iid = self.logger.db.item_id(key)
+        hit = self.cache.lookup(iid)
+        if hit is not None:
+            value = hit[0]
+        else:
+            t0 = time.perf_counter()
+            value = self.store.fetch(key)
+            jax.block_until_ready(value)
+            self.demand_wait_s += time.perf_counter() - t0
+            self.cache.put_demand(iid, value, self.store.nbytes(key))
+        self._prefetch(iid)
+        return value
+
+    def end_session(self):
+        """A request finished: cut the session; maybe re-mine."""
+        self.logger.flush_session()
+        self._sessions_since_mine += 1
+        if self._sessions_since_mine >= self.cfg.mine_every_sessions:
+            self._sessions_since_mine = 0
+            self.mine_now()
+
+    def mine_now(self) -> int:
+        db = self.logger.snapshot()
+        patterns, _ = mine_dynamic_minsup(
+            db, self.cfg.mining, min_patterns=self.cfg.min_patterns)
+        self.metastore.populate(patterns)
+        self.engine.replace_index(PTreeIndex.build(self.metastore))
+        return len(self.metastore)
+
+    def _prefetch(self, iid: int):
+        for target in self.engine.on_request(iid):
+            if self.cache.contains(target):
+                continue
+            key = self.logger.db.item(target)
+            value = self.store.fetch(key)   # async dispatch (not blocked on)
+            self.prefetch_issued += 1
+            self.cache.put_prefetch(
+                target, value, self.store.nbytes(key), available_at=0.0)
+
+    # -- observability -----------------------------------------------------
+    @property
+    def stats(self):
+        s = self.cache.stats
+        return {
+            "hit_rate": s.hit_rate,
+            "precision": s.precision,
+            "prefetches": s.prefetches,
+            "prefetch_hits": s.prefetch_hits,
+            "demand_wait_s": self.demand_wait_s,
+            "store_fetches": self.store.fetches,
+        }

@@ -1,0 +1,11 @@
+"""Sharding rules: logical axes -> mesh axes with divisibility fallback."""
+from . import rules
+from .rules import (
+    batch_specs_pspec, cache_pspec, fallback_report, named, opt_pspec,
+    param_specs,
+)
+
+__all__ = [
+    "batch_specs_pspec", "cache_pspec", "fallback_report", "named",
+    "opt_pspec", "param_specs", "rules",
+]

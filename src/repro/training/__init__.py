@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, step functions, compression, checkpointing."""
+from .optimizer import OptConfig, adamw_init, adamw_update, lr_at
+from .train_step import make_steps
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "lr_at", "make_steps"]

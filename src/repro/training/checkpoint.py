@@ -1,0 +1,135 @@
+"""Sharded checkpointing with atomic commits, keep-N retention, and
+elastic mesh resharding.
+
+Layout (one directory per step):
+
+  <dir>/step_000420/
+     manifest.json       # tree structure, shapes, dtypes, mesh, pspecs
+     arrays.npz          # one entry per leaf (host-gathered)
+     _COMMITTED          # written last — torn checkpoints are never loaded
+
+Fault tolerance: ``latest_step`` only considers committed checkpoints, so a
+job killed mid-save restarts from the previous one.  ``restore`` accepts a
+*different* mesh than the checkpoint was saved under (elastic up/down
+scaling): arrays are loaded on host and re-placed with the new sharding —
+exactly what a restart on a resized pod slice does.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "list_steps"]
+
+_COMMIT = "_COMMITTED"
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save(ckpt_dir, step: int, tree, *, keep: int = 3,
+         extra_meta: Optional[dict] = None) -> Path:
+    """Host-gather every leaf and write an atomic checkpoint."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:09d}"
+    names, leaves, _ = _flatten_with_names(tree)
+    arrays = {}
+    for name, leaf in zip(names, leaves):
+        x = np.asarray(jax.device_get(leaf))
+        # bf16 has no numpy dtype -> store raw bits + dtype tag
+        if str(leaf.dtype) == "bfloat16":
+            arrays[name] = x.view(np.uint16)
+        else:
+            arrays[name] = x
+    manifest = {
+        "step": step,
+        "names": names,
+        "dtypes": [str(l.dtype) for l in leaves],
+        "shapes": [list(np.shape(l)) for l in leaves],
+        "extra": extra_meta or {},
+    }
+    tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_"))
+    try:
+        np.savez(tmp / "arrays.npz", **{
+            f"a{i}": a for i, a in enumerate(arrays.values())})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        (tmp / _COMMIT).write_text("ok")
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    finally:
+        if tmp.exists():
+            shutil.rmtree(tmp, ignore_errors=True)
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _retain(ckpt_dir: Path, keep: int):
+    steps = list_steps(ckpt_dir)
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s:09d}", ignore_errors=True)
+
+
+def list_steps(ckpt_dir) -> list[int]:
+    ckpt_dir = Path(ckpt_dir)
+    out = []
+    if not ckpt_dir.exists():
+        return out
+    for p in ckpt_dir.iterdir():
+        if p.name.startswith("step_") and (p / _COMMIT).exists():
+            out.append(int(p.name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir, step: int, like_tree, *, shardings=None):
+    """Load a checkpoint into the structure of ``like_tree``.
+
+    ``shardings``: optional matching tree of NamedSharding — may target a
+    DIFFERENT mesh than the save-time one (elastic restart); arrays are
+    re-placed shard-by-shard via ``jax.device_put``.
+    """
+    path = Path(ckpt_dir) / f"step_{step:09d}"
+    if not (path / _COMMIT).exists():
+        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+    names, leaves, treedef = _flatten_with_names(like_tree)
+    if names != manifest["names"]:
+        raise ValueError(
+            "checkpoint tree mismatch:\n"
+            f"  want {names[:5]}...\n  have {manifest['names'][:5]}...")
+    shard_leaves = (jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: hasattr(x, "spec"))
+        if shardings is not None else [None] * len(leaves))
+    import jax.numpy as jnp
+
+    out = []
+    for i, (leaf, shd, dt) in enumerate(
+            zip(leaves, shard_leaves, manifest["dtypes"])):
+        arr = data[f"a{i}"]
+        x = (jnp.asarray(arr).view(jnp.bfloat16) if dt == "bfloat16"
+             else jnp.asarray(arr))
+        if shd is not None:
+            x = jax.device_put(x, shd)
+        out.append(x)
+    return treedef.unflatten(out)

@@ -1,0 +1,47 @@
+"""Int8 gradient compression for cross-pod reductions.
+
+Per-tensor-block (last-dim blocks of 256) symmetric int8 quantization with
+f32 scales: 4x wire-size reduction on the gradient all-reduce that crosses
+the slow pod-to-pod links.  On a real deployment the compressed
+representation is what travels the 'pod' axis (quantize -> psum ->
+dequantize); the roundtrip here is numerically identical and is exercised
+by the unit tests + the ``compress_grads`` train-step flag.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_tree", "decompress_tree", "compress", "decompress"]
+
+_BLOCK = 256
+
+
+def compress(x: jnp.ndarray):
+    """x: any-shape float -> (int8 codes, f32 scales, orig_shape)."""
+    shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    return {"codes": codes, "scale": scale, "shape": shape, "pad": pad}
+
+
+def decompress(c) -> jnp.ndarray:
+    flat = (c["codes"].astype(jnp.float32) * c["scale"]).reshape(-1)
+    n = flat.size - c["pad"]
+    return flat[:n].reshape(c["shape"])
+
+
+def compress_tree(tree):
+    return jax.tree.map(compress, tree,
+                        is_leaf=lambda x: isinstance(x, jnp.ndarray))
+
+
+def decompress_tree(tree):
+    return jax.tree.map(decompress, tree,
+                        is_leaf=lambda x: isinstance(x, dict) and "codes" in x)

@@ -1,0 +1,84 @@
+"""Train / prefill / decode step functions, jit-able with static config.
+
+``make_steps(cfg, opt_cfg)`` returns closures suitable for
+``jax.jit(..., in_shardings=..., out_shardings=...)`` in both the real
+driver (`launch/train.py`) and the AOT dry-run (`launch/dryrun.py`).
+
+Microbatching (gradient accumulation) runs as a ``lax.scan`` over
+microbatch slices — memory scales with the microbatch, not the global
+batch.  Optional int8 gradient compression quantizes per-tensor-block
+before the cross-pod reduction (see `training/compression.py`).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step as model_decode
+from repro.models import forward, loss_fn
+
+from .compression import compress_tree, decompress_tree
+from .optimizer import OptConfig, adamw_init, adamw_update
+
+__all__ = ["make_steps", "TrainStepConfig"]
+
+
+def make_steps(cfg, opt_cfg: Optional[OptConfig] = None, *,
+               microbatches: int = 1, compress_grads: bool = False):
+    """Returns dict with train_step / prefill_step / decode_step closures."""
+    opt_cfg = opt_cfg or OptConfig()
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(params, opt, batch):
+        if microbatches > 1:
+            def mb_slice(x, i):
+                mb = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def body(acc, i):
+                mb_batch = jax.tree.map(lambda x: mb_slice(x, i), batch)
+                loss, metrics, grads = grads_of(params, mb_batch)
+                acc = jax.tree.map(jnp.add, acc,
+                                   {"g": grads, "loss": loss})
+                return acc, None
+
+            zero = {"g": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "loss": jnp.zeros((), jnp.float32)}
+            acc, _ = jax.lax.scan(
+                body, zero, jnp.arange(microbatches), length=microbatches)
+            grads = jax.tree.map(lambda g: g / microbatches, acc["g"])
+            loss = acc["loss"] / microbatches
+            metrics = {"loss": loss, "perplexity": jnp.exp(loss)}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+        if compress_grads:
+            grads = decompress_tree(compress_tree(grads))
+        params, opt, opt_metrics = adamw_update(opt_cfg, params, grads, opt)
+        return params, opt, {**metrics, **opt_metrics}
+
+    def prefill_step(params, batch):
+        # serving prefill: only the next-token distribution is needed —
+        # unembed just the last position (big win at 100k+ vocabs)
+        return forward(cfg, params, batch, last_only=True)
+
+    def decode(params, cache, tokens):
+        return model_decode(cfg, params, cache, tokens)
+
+    return {
+        "train_step": train_step,
+        "prefill_step": prefill_step,
+        "decode_step": decode,
+        "init_opt": lambda params: adamw_init(params),
+    }
+
+
+TrainStepConfig = OptConfig  # re-export alias used by launch configs

@@ -1,0 +1,87 @@
+"""Two-space cache invariants (paper §4.4)."""
+
+from repro.core import TwoSpaceCache
+from repro.core.cache import LRUSpace, _Entry
+
+
+def test_lru_eviction_order():
+    s = LRUSpace(3)
+    for k in "abc":
+        s.put(k, _Entry(k, 1))
+    s.get("a")  # refresh a
+    evicted = s.put("d", _Entry("d", 1))
+    assert evicted == ["b"]
+    assert "a" in s and "c" in s and "d" in s
+
+
+def test_capacity_zero_admits_nothing():
+    c = TwoSpaceCache(0)
+    c.put_demand("k", b"v", 1)
+    assert c.lookup("k") is None
+    c.put_prefetch("p", b"v", 1, 0.0)
+    assert c.lookup("p") is None
+    assert c.stats.prefetches == 1  # still counted (overhead bench, Fig 18)
+
+
+def test_prefetch_hit_promotes_and_counts_once():
+    c = TwoSpaceCache(100, preemptive_frac=0.5)
+    assert c.put_prefetch("x", b"vv", 2, available_at=0.0)
+    v, wait = c.lookup("x", now=1.0)
+    assert v == b"vv" and wait == 0.0
+    assert c.stats.prefetch_hits == 1 and c.stats.hits == 1
+    assert "x" in c.main.od and "x" not in c.preemptive.od
+    # second access: plain cache hit, not another prefetch hit
+    c.lookup("x", now=2.0)
+    assert c.stats.prefetch_hits == 1 and c.stats.hits == 2
+
+
+def test_prefetch_in_flight_blocks_for_remainder():
+    c = TwoSpaceCache(100)
+    c.put_prefetch("x", b"v", 1, available_at=5.0)
+    v, wait = c.lookup("x", now=2.0)
+    assert wait == 3.0
+    assert c.stats.prefetch_waits == 1
+
+
+def test_spaces_are_disjoint_and_bounded():
+    c = TwoSpaceCache(10, preemptive_frac=0.5)
+    for i in range(20):
+        c.put_demand(("d", i), b"x", 1)
+        c.put_prefetch(("p", i), b"x", 1, 0.0)
+    assert c.main.used <= 10 and c.preemptive.used <= 5
+    assert not (set(c.main.od) & set(c.preemptive.od))
+
+
+def test_prefetch_does_not_pollute_main():
+    c = TwoSpaceCache(10, preemptive_frac=0.1)
+    for i in range(10):
+        c.put_demand(("d", i), b"x", 1)
+    for i in range(100):
+        c.put_prefetch(("p", i), b"x", 1, 0.0)
+    # main space untouched by prefetch churn
+    assert all(("d", i) in c.main.od for i in range(10))
+
+
+def test_write_updates_in_place_and_invalidate_coherence():
+    c = TwoSpaceCache(100)
+    c.put_demand("k", b"old", 3)
+    c.write("k", b"new", 3)
+    assert c.lookup("k")[0] == b"new"
+    c.invalidate("k")
+    assert c.lookup("k") is None
+    assert c.stats.invalidations == 1
+
+
+def test_demand_fill_removes_stale_prefetch_copy():
+    c = TwoSpaceCache(100)
+    c.put_prefetch("k", b"v1", 2, 0.0)
+    c.put_demand("k", b"v2", 2)
+    assert "k" not in c.preemptive.od
+    assert c.lookup("k")[0] == b"v2"
+
+
+def test_prefetch_skips_already_cached():
+    c = TwoSpaceCache(100)
+    c.put_demand("k", b"v", 1)
+    assert not c.put_prefetch("k", b"v", 1, 0.0)
+    assert c.stats.prefetches == 0

@@ -1,0 +1,113 @@
+"""Mining correctness: all algorithms vs the brute-force oracle."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ALGORITHMS,
+    MiningParams,
+    Pattern,
+    SequenceDatabase,
+    VerticalBitmaps,
+    brute_force,
+    mine_dynamic_minsup,
+)
+from repro.core.mining import maximal_filter
+
+
+def make_db(seed=0, n_sessions=60, n_items=12, min_len=3, max_len=10,
+            planted=((1, 2, 3, 4), (5, 6, 7))):
+    """Random sessions with planted frequent subsequences."""
+    rng = np.random.default_rng(seed)
+    sessions = []
+    for _ in range(n_sessions):
+        length = int(rng.integers(min_len, max_len + 1))
+        s = list(rng.integers(0, n_items, size=length))
+        if rng.random() < 0.6 and planted:
+            p = list(planted[int(rng.integers(0, len(planted)))])
+            at = int(rng.integers(0, max(1, len(s) - len(p) + 1)))
+            s[at:at + len(p)] = p
+        sessions.append(s)
+    return SequenceDatabase.from_sessions(sessions)
+
+
+def canon(patterns):
+    return {(p.items, p.support) for p in patterns}
+
+
+@pytest.mark.parametrize("algo", ["spam", "prefixspan", "gsp"])
+@pytest.mark.parametrize("maxgap", [1, 2, None])
+def test_all_patterns_match_oracle(algo, maxgap):
+    db = make_db()
+    params = MiningParams(minsup=0.1, min_len=3, max_len=6, maxgap=maxgap)
+    got = canon(ALGORITHMS[algo](db, params))
+    want = canon(brute_force(db, params))
+    assert got == want
+
+
+@pytest.mark.parametrize("maxgap", [1, None])
+def test_vmsp_is_maximal_subset_of_oracle(maxgap):
+    db = make_db(seed=3)
+    params = MiningParams(minsup=0.1, min_len=3, max_len=6, maxgap=maxgap)
+    allp = brute_force(db, params)
+    got = ALGORITHMS["vmsp"](db, params)
+    want = maximal_filter(allp, maxgap)
+    assert canon(got) == canon(want)
+    # every vmsp pattern is frequent with correct support
+    oracle = {p.items: p.support for p in allp}
+    for p in got:
+        assert oracle[p.items] == p.support
+
+
+def test_vmsp_no_pattern_contains_another():
+    db = make_db(seed=7)
+    params = MiningParams(minsup=0.08, min_len=3, max_len=8, maxgap=1)
+    pats = ALGORITHMS["vmsp"](db, params)
+    items = [p.items for p in pats]
+    for a in items:
+        for b in items:
+            if a is b or len(a) >= len(b):
+                continue
+            for off in range(len(b) - len(a) + 1):
+                assert b[off:off + len(a)] != a, (a, b)
+
+
+def test_planted_sequences_found():
+    db = make_db(n_sessions=200)
+    params = MiningParams(minsup=0.15, min_len=3, max_len=6, maxgap=1)
+    found = {p.items for p in ALGORITHMS["vmsp"](db, params)}
+    covered = set()
+    for f in found:
+        for i in range(len(f)):
+            for j in range(i + 1, len(f) + 1):
+                covered.add(f[i:j])
+    # raw planted values map through the database vocabulary
+    assert tuple(db.item_id(x) for x in (1, 2, 3, 4)) in covered
+    assert tuple(db.item_id(x) for x in (5, 6, 7)) in covered
+
+
+def test_shift1_and_smear():
+    db = SequenceDatabase.from_sessions([[0] * 40])  # spans >1 word
+    vb = VerticalBitmaps(db, 1)
+    b = np.zeros((1, 2), np.uint32)
+    b[0, 0] = np.uint32(1) << np.uint32(31)  # bit at position 31
+    s = vb.shift1(b)
+    assert s[0, 0] == 0 and s[0, 1] == 1  # crosses the word boundary
+    sm = vb.smear_after(b)
+    assert sm[0, 0] == 0 and sm[0, 1] == 0xFFFFFFFF
+
+
+def test_dynamic_minsup_decays_until_enough():
+    db = make_db(n_sessions=100)
+    params = MiningParams(minsup=0.1, min_len=3, max_len=6, maxgap=1)
+    pats, used = mine_dynamic_minsup(db, params, min_patterns=2, start=0.9)
+    assert len(pats) >= 2 or used <= 0.01
+    assert used < 0.9  # must have decayed at least once on this data
+
+
+def test_support_semantics_multiple_occurrences_count_once():
+    # pattern occurs twice in one session -> support 1
+    db = SequenceDatabase.from_sessions([[1, 2, 3, 9, 1, 2, 3]])
+    params = MiningParams(minsup=1.0, min_len=3, max_len=3, maxgap=1)
+    pats = {p.items: p.support for p in ALGORITHMS["spam"](db, params)}
+    assert pats[(1, 2, 3)] == 1

@@ -1,0 +1,176 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+
+import dataclasses
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ALGORITHMS,
+    MiningParams,
+    Pattern,
+    PatternMetastore,
+    PTreeIndex,
+    SequenceDatabase,
+    TwoSpaceCache,
+    brute_force,
+)
+from repro.core.mining import maximal_filter
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+sessions_strategy = st.lists(
+    st.lists(st.integers(0, 5), min_size=1, max_size=12),
+    min_size=1, max_size=24,
+)
+
+_SETTINGS = dict(max_examples=40, deadline=None,
+                 suppress_health_check=[HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------------------
+# mining invariants
+# ---------------------------------------------------------------------------
+
+
+@given(sessions=sessions_strategy,
+       minsup=st.sampled_from([0.1, 0.3, 0.6]),
+       maxgap=st.sampled_from([1, 2, None]))
+@settings(**_SETTINGS)
+def test_spam_is_sound_and_complete(sessions, minsup, maxgap):
+    """Every reported pattern is frequent with the exact oracle support,
+    and no frequent pattern is missed."""
+    db = SequenceDatabase.from_sessions(sessions)
+    params = MiningParams(minsup=minsup, min_len=2, max_len=5, maxgap=maxgap)
+    got = {(p.items, p.support) for p in ALGORITHMS["spam"](db, params)}
+    want = {(p.items, p.support) for p in brute_force(db, params)}
+    assert got == want
+
+
+@given(sessions=sessions_strategy, minsup=st.sampled_from([0.15, 0.4]))
+@settings(**_SETTINGS)
+def test_vmsp_patterns_are_maximal_and_frequent(sessions, minsup):
+    db = SequenceDatabase.from_sessions(sessions)
+    params = MiningParams(minsup=minsup, min_len=2, max_len=5, maxgap=1)
+    vmsp = ALGORITHMS["vmsp"](db, params)
+    oracle = {p.items: p.support for p in brute_force(db, params)}
+    items = [p.items for p in vmsp]
+    for p in vmsp:
+        assert oracle.get(p.items) == p.support   # sound
+    # maximality: no pattern is a strict contiguous window of another
+    for a in items:
+        for b in items:
+            if a is not b and len(a) < len(b):
+                assert all(b[o:o + len(a)] != a
+                           for o in range(len(b) - len(a) + 1))
+    # every maximal oracle pattern is present
+    want = {p.items for p in maximal_filter(
+        [Pattern(k, v) for k, v in oracle.items()], 1)}
+    assert {p.items for p in vmsp} == want
+
+
+@given(sessions=sessions_strategy)
+@settings(**_SETTINGS)
+def test_support_monotone_in_minsup(sessions):
+    db = SequenceDatabase.from_sessions(sessions)
+    lo = MiningParams(minsup=0.1, min_len=2, max_len=4, maxgap=1)
+    hi = MiningParams(minsup=0.5, min_len=2, max_len=4, maxgap=1)
+    got_lo = {p.items for p in ALGORITHMS["spam"](db, lo)}
+    got_hi = {p.items for p in ALGORITHMS["spam"](db, hi)}
+    assert got_hi <= got_lo
+
+
+# ---------------------------------------------------------------------------
+# cache invariants
+# ---------------------------------------------------------------------------
+
+ops_strategy = st.lists(st.tuples(
+    st.sampled_from(["demand", "prefetch", "lookup", "write", "invalidate"]),
+    st.integers(0, 9)), max_size=120)
+
+
+@given(ops=ops_strategy, cap=st.sampled_from([0, 3, 8]))
+@settings(**_SETTINGS)
+def test_cache_invariants_under_arbitrary_ops(ops, cap):
+    c = TwoSpaceCache(cap, preemptive_frac=0.5)
+    for op, key in ops:
+        if op == "demand":
+            c.put_demand(key, b"x", 1)
+        elif op == "prefetch":
+            c.put_prefetch(key, b"x", 1, 0.0)
+        elif op == "lookup":
+            c.lookup(key, 0.0)
+        elif op == "write":
+            c.write(key, b"y", 1)
+        else:
+            c.invalidate(key)
+        # invariants after every op
+        assert c.main.used <= c.main.capacity
+        assert c.preemptive.used <= c.preemptive.capacity
+        assert not (set(c.main.od) & set(c.preemptive.od))
+        assert c.main.used == sum(e.size for e in c.main.od.values())
+    s = c.stats
+    assert s.hits + s.misses == s.accesses
+    assert s.prefetch_hits <= s.prefetches or s.prefetches == 0
+
+
+# ---------------------------------------------------------------------------
+# metastore + ptree invariants
+# ---------------------------------------------------------------------------
+
+patterns_strategy = st.lists(st.tuples(
+    st.lists(st.integers(0, 6), min_size=2, max_size=6),
+    st.integers(1, 50)), min_size=1, max_size=40)
+
+
+@given(pats=patterns_strategy, cap=st.sampled_from([1, 5, 1000]))
+@settings(**_SETTINGS)
+def test_metastore_capacity_and_ranking(pats, cap):
+    ms = PatternMetastore(capacity=cap)
+    ms.populate([Pattern(tuple(i), s) for i, s in pats])
+    assert len(ms) <= cap
+    ranks = [PatternMetastore.rank(p) for p in ms]
+    assert ranks == sorted(ranks, reverse=True)
+    # kept patterns are the global top by rank
+    all_ranks = sorted((len(i) * s for i, s in pats), reverse=True)
+    if len(ms) and len(all_ranks) > cap:
+        assert min(ranks) >= all_ranks[cap - 1] - 1e-9 or len(ms) < cap
+
+
+@given(pats=patterns_strategy)
+@settings(**_SETTINGS)
+def test_ptree_probability_axioms(pats):
+    idx = PTreeIndex.build([Pattern(tuple(i), s) for i, s in pats])
+    for tree in idx.trees.values():
+        for node in tree.root.level_order():
+            if node.children:
+                total = sum(c.prob for c in node.children.values())
+                assert abs(total - 1.0) < 1e-9
+            for c in node.children.values():
+                assert 0.0 <= c.prob <= 1.0
+                assert c.cum_prob <= node.cum_prob + 1e-12
+                assert c.depth == node.depth + 1
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+@given(data=st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1,
+                     max_size=600))
+@settings(**_SETTINGS)
+def test_compression_error_bound_property(data):
+    from repro.training.compression import compress, decompress
+    import jax.numpy as jnp
+
+    x = jnp.asarray(np.array(data, np.float32))
+    y = decompress(compress(x))
+    assert y.shape == x.shape
+    scale = float(np.max(np.abs(np.array(data)))) or 1.0
+    # blockwise bound is tighter; the global bound must certainly hold
+    assert float(np.max(np.abs(np.asarray(y) - np.asarray(x)))) <= (
+        scale / 127.0 + 1e-6)

@@ -1,0 +1,86 @@
+"""Probabilistic tree construction and queries (paper Fig. 3)."""
+
+import pytest
+
+from repro.core import Pattern, PTreeIndex
+
+
+def fig3_patterns():
+    """The paper's Figure 3 example: 8 sequences over roots {a,b,c}.
+
+    Tree a: <a,d,i> sup 7, <a,e,j> sup ~2.1, <a,e,k> sup ~0.9 (weights scaled
+    x10 to stay integral): p(d|a)=0.7, p(e|a)=0.3, p(j|e)=0.7, p(k|e)=0.3.
+    """
+    a, b, c, d, e, i, j, k = range(8)
+    return [
+        Pattern((a, d, i), 70),
+        Pattern((a, e, j), 21),
+        Pattern((a, e, k), 9),
+        Pattern((b, d, i), 10),
+        Pattern((c, d, i), 10),
+    ], (a, b, c, d, e, i, j, k)
+
+
+def test_tree_probabilities_match_figure3():
+    patterns, (a, b, c, d, e, i, j, k) = fig3_patterns()
+    idx = PTreeIndex.build(patterns)
+    assert len(idx) == 3
+    ta = idx.match_root(a)
+    nd = ta.root.children[d]
+    ne = ta.root.children[e]
+    assert nd.prob == pytest.approx(0.7)
+    assert ne.prob == pytest.approx(0.3)
+    assert ne.children[j].prob == pytest.approx(0.7)
+    assert ne.children[k].prob == pytest.approx(0.3)
+    # cumulative: P(j from root a) = 0.3 * 0.7
+    assert ne.children[j].cum_prob == pytest.approx(0.21)
+    assert nd.children[i].cum_prob == pytest.approx(0.7)
+
+
+def test_children_probs_sum_to_one():
+    patterns, _ = fig3_patterns()
+    idx = PTreeIndex.build(patterns)
+    for tree in idx.trees.values():
+        for node in tree.root.level_order():
+            if node.children:
+                assert sum(c.prob for c in node.children.values()) == pytest.approx(1.0)
+
+
+def test_top_n_cumulative_is_level_then_prob_ordered():
+    patterns, (a, b, c, d, e, i, j, k) = fig3_patterns()
+    tree = PTreeIndex.build(patterns).match_root(a)
+    top = tree.top_n_cumulative(3)
+    # highest cum-prob nodes: d (0.7), i (0.7), e (0.3); ordered by depth
+    assert [n.item for n in top] == [d, e, i] or [n.item for n in top] == [d, i, e]
+    depths = [n.depth for n in top]
+    assert depths == sorted(depths)
+    probs_by_depth = {}
+    for n in top:
+        probs_by_depth.setdefault(n.depth, []).append(n.cum_prob)
+    for ps in probs_by_depth.values():
+        assert ps == sorted(ps, reverse=True)
+
+
+def test_walk_and_levels():
+    patterns, (a, b, c, d, e, i, j, k) = fig3_patterns()
+    tree = PTreeIndex.build(patterns).match_root(a)
+    assert tree.walk((a, e, j)).item == j
+    assert tree.walk((a, j)) is None
+    assert {n.item for n in tree.levels(1, 1)} == {d, e}
+    assert {n.item for n in tree.levels(2, 2)} == {i, j, k}
+    assert tree.max_depth == 2
+
+
+def test_paths_are_subsets_of_patterns():
+    patterns, _ = fig3_patterns()
+    idx = PTreeIndex.build(patterns)
+    pattern_set = {p.items for p in patterns}
+    prefixes = {p.items[:k] for p in patterns for k in range(1, len(p.items) + 1)}
+    for tree in idx.trees.values():
+        for node in tree.nodes_below():
+            path = []
+            nd = node
+            while nd is not None:
+                path.append(nd.item)
+                nd = nd.parent
+            assert tuple(reversed(path)) in prefixes

@@ -1,0 +1,111 @@
+"""Serving engine + PALPATINE expert prefetcher integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import (
+    decode_step, fill_cache, forward, init_cache, init_params,
+)
+from repro.serving import (
+    ExpertPrefetcher, ExpertStore, PrefetcherConfig, ServeConfig,
+    ServingEngine,
+)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = reduced(get_config("codeqwen1.5-7b"),
+                  n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                  head_dim=16, d_ff=64, vocab_size=64)
+    params = init_params(cfg, jax.random.key(1))
+    return cfg, params
+
+
+def test_prefill_then_decode_matches_full_forward(dense_setup):
+    """The serving path (prefill cache + decode steps) must produce the
+    same logits as the full forward over the whole sequence."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 12)), jnp.int32)
+
+    full = forward(cfg, params, {"tokens": toks})           # (1, 12, V)
+
+    cache = init_cache(cfg, 1, max_len=16)
+    cache = fill_cache(cfg, params, {"tokens": toks[:, :8]}, cache)
+    logits = None
+    for i in range(8, 12):
+        # feed token i at cache position i (prefill consumed 0..7)
+        logits, cache = decode_step(cfg, params, cache, toks[:, i:i + 1])
+    # the last step consumed token 11, so its logits match full position 11
+    np.testing.assert_allclose(
+        np.asarray(logits[0, 0]), np.asarray(full[0, 11]),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_serving_engine_generate(dense_setup):
+    cfg, params = dense_setup
+    eng = ServingEngine(cfg, params, ServeConfig(max_len=32))
+    prompts = np.random.default_rng(1).integers(0, cfg.vocab_size, (2, 8))
+    out = eng.generate(prompts.astype(np.int32), new_tokens=5)
+    assert out.shape == (2, 5)
+    assert eng.stats["tokens"] == 10
+    assert eng.tokens_per_s > 0
+    # greedy decoding is deterministic
+    eng2 = ServingEngine(cfg, params, ServeConfig(max_len=32))
+    out2 = eng2.generate(prompts.astype(np.int32), new_tokens=5)
+    np.testing.assert_array_equal(out, out2)
+
+
+# ---------------------------------------------------------------------------
+# expert prefetcher (the paper's technique at serving time)
+# ---------------------------------------------------------------------------
+
+
+def routing_trace(rng, n_layers, n_experts, n_requests, patterns):
+    """Synthetic expert-routing paths with recurrent frequent sequences."""
+    for _ in range(n_requests):
+        if rng.random() < 0.7:
+            path = patterns[int(rng.integers(0, len(patterns)))]
+        else:
+            path = [(l, int(rng.integers(0, n_experts)))
+                    for l in range(n_layers)]
+        yield path
+
+
+def test_expert_prefetcher_learns_routing_patterns():
+    rng = np.random.default_rng(3)
+    L, E = 6, 16
+    store = ExpertStore(L, E, d=8, f=16)
+    patterns = [[(l, int(rng.integers(0, E))) for l in range(L)]
+                for _ in range(3)]
+    pf = ExpertPrefetcher(store, PrefetcherConfig(
+        cache_experts=12, mine_every_sessions=40))
+    # stage 1: observe
+    for path in routing_trace(rng, L, E, 80, patterns):
+        for key in path:
+            pf.access(*key)
+        pf.end_session()
+    assert len(pf.metastore) > 0
+    s0 = dict(pf.stats)
+    # stage 2: steady state
+    for path in routing_trace(rng, L, E, 80, patterns):
+        for key in path:
+            pf.access(*key)
+        pf.end_session()
+    s1 = pf.stats
+    assert s1["prefetches"] > s0["prefetches"]
+    assert s1["prefetch_hits"] > 0
+    assert s1["hit_rate"] > 0.2
+
+
+def test_expert_prefetcher_returns_correct_weights():
+    store = ExpertStore(2, 4, d=4, f=4, seed=9)
+    pf = ExpertPrefetcher(store)
+    w = pf.access(1, 3)
+    np.testing.assert_allclose(np.asarray(w), store.weights[(1, 3)])
+    # cached second access returns the same values
+    w2 = pf.access(1, 3)
+    np.testing.assert_allclose(np.asarray(w2), store.weights[(1, 3)])

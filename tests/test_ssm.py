@@ -1,0 +1,131 @@
+"""SSM substrate: chunked GLA vs naive recurrence, decode equivalence,
+chunk-size independence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import ssm
+
+
+def naive_gla(q, k, v, log_f, log_i):
+    """Direct O(S²)-free recurrence: S_t = f_t S_{t-1} + i_t k_t v_t^T."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    state = np.zeros((b, h, dk, dv), np.float64)
+    out = np.zeros((b, s, h, dv), np.float64)
+    qn, kn, vn = map(lambda x: np.asarray(x, np.float64), (q, k, v))
+    f = np.exp(np.asarray(log_f, np.float64))
+    i = np.exp(np.clip(np.asarray(log_i, np.float64), -8, 8))
+    for t in range(s):
+        state = (f[:, t, :, None, None] * state
+                 + i[:, t, :, None, None]
+                 * np.einsum("bhk,bhv->bhkv", kn[:, t], vn[:, t]))
+        out[:, t] = np.einsum("bhk,bhkv->bhv", qn[:, t], state)
+    return out, state
+
+
+def mk_inputs(rng, b=2, s=64, h=2, dk=8, dv=8):
+    q = jnp.asarray(rng.standard_normal((b, s, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, dk)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, dv)), jnp.float32)
+    log_f = jnp.asarray(-np.abs(rng.standard_normal((b, s, h))) * 0.1,
+                        jnp.float32)
+    log_i = jnp.asarray(rng.standard_normal((b, s, h)) * 0.5, jnp.float32)
+    return q, k, v, log_f, log_i
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_chunked_gla_matches_naive_recurrence(chunk):
+    rng = np.random.default_rng(0)
+    q, k, v, log_f, log_i = mk_inputs(rng)
+    out, state = ssm.chunked_gla(q, k, v, log_f, log_i, chunk)
+    want, want_state = naive_gla(q, k, v, log_f, log_i)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), want_state,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunk_size_independence():
+    rng = np.random.default_rng(1)
+    q, k, v, log_f, log_i = mk_inputs(rng, s=48)
+    o1, s1 = ssm.chunked_gla(q, k, v, log_f, log_i, 8)
+    o2, s2 = ssm.chunked_gla(q, k, v, log_f, log_i, 16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gla_decode_step_matches_chunked():
+    """Running decode steps one-by-one == chunked full-sequence output."""
+    rng = np.random.default_rng(2)
+    q, k, v, log_f, log_i = mk_inputs(rng, b=1, s=16)
+    full, final_state = ssm.chunked_gla(q, k, v, log_f, log_i, 8)
+    state = jnp.zeros_like(final_state)
+    outs = []
+    for t in range(16):
+        h, state = ssm.gla_decode_step(
+            state, q[:, t], k[:, t], v[:, t], log_f[:, t], log_i[:, t])
+        outs.append(h)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(final_state),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mlstm_train_decode_equivalence():
+    """mLSTM block: chunked full-seq forward == step-by-step decode."""
+    cfg = reduced(get_config("xlstm-1.3b"), n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, head_dim=16)
+    p = ssm.mlstm_init(jax.random.key(0), cfg, jnp.float32)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((1, 8, 32)) * 0.1, jnp.float32)
+    full = ssm.mlstm_apply(p, cfg, x)
+    state = jnp.zeros(ssm.mlstm_state_shape(cfg, 1), jnp.float32)
+    outs = []
+    for t in range(8):
+        y, state = ssm.mlstm_decode(p, cfg, x[:, t:t + 1], state)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba2_train_decode_equivalence():
+    cfg = reduced(get_config("zamba2-7b"), n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, head_dim=16, ssm_state=8)
+    p = ssm.mamba2_init(jax.random.key(0), cfg, jnp.float32)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((1, 8, 32)) * 0.1, jnp.float32)
+    full = ssm.mamba2_apply(p, cfg, x)
+    st_shape, cv_shape = ssm.mamba2_state_shapes(cfg, 1)
+    state = jnp.zeros(st_shape, jnp.float32)
+    conv = jnp.zeros(cv_shape, jnp.float32)
+    outs = []
+    for t in range(8):
+        y, state, conv = ssm.mamba2_decode(p, cfg, x[:, t:t + 1], state, conv)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_slstm_train_decode_equivalence():
+    cfg = reduced(get_config("xlstm-1.3b"), n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, head_dim=16)
+    p = ssm.slstm_init(jax.random.key(0), cfg, jnp.float32)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((1, 6, 32)) * 0.1, jnp.float32)
+    full = ssm.slstm_apply(p, cfg, x)
+    carry = tuple(jnp.zeros((1, 2, 16), jnp.float32) for _ in range(3))
+    outs = []
+    for t in range(6):
+        y, carry = ssm.slstm_decode(p, cfg, x[:, t:t + 1], carry)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
