@@ -1,0 +1,83 @@
+"""Sharded-cluster scaling (beyond-paper): aggregate + per-shard hit ratio
+and mean read latency vs storage-node count and concurrent-client count, on
+the TPC-C-style workload, with the gossiped pattern metastore warming every
+tenant from the cluster's pooled mining.
+
+Rows:
+  cluster_s{S}_c{M}_baseline  — M unmodified clients, S storage nodes
+  cluster_s{S}_c{M}_palpatine — M Palpatine tenants + pattern exchange
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ClusterBaseline, ClusterClient, ClusterConfig
+from repro.core import HeuristicConfig, MiningParams, PalpatineConfig
+
+from .common import latency_stats, row
+from .workloads import TPCC, TPCCConfig
+
+
+def tenant_streams(gen: TPCC, n_clients: int, n_tx: int, seed: int):
+    """One independent transaction stream per tenant (distinct rng)."""
+    out = []
+    for t in range(n_clients):
+        rng = np.random.default_rng(seed * 1000 + t)
+        out.append([gen.transaction(rng) for _ in range(n_tx)])
+    return out
+
+
+def palpatine_config(cache_bytes: int = 1 << 20) -> PalpatineConfig:
+    # the bench_tpcc working point, per tenant
+    return PalpatineConfig(
+        heuristic=HeuristicConfig("fetch_progressive"),
+        cache_bytes=cache_bytes,
+        mining=MiningParams(minsup=0.02, min_len=3, max_len=15, maxgap=1),
+        min_patterns=400,
+        dynamic_minsup_floor=0.002,
+        column_mining=True,
+    )
+
+
+def main(quick: bool = True):
+    shard_counts = (1, 4) if quick else (1, 2, 4, 8)
+    client_counts = (2, 6) if quick else (2, 4, 8, 16)
+    n_tx = 100 if quick else 250          # per tenant, per stage
+    gen = TPCC(TPCCConfig())
+
+    for n_shards in shard_counts:
+        for n_clients in client_counts:
+            stage2 = tenant_streams(gen, n_clients, n_tx, seed=7)
+
+            store = gen.make_sharded_store(n_shards)
+            base = ClusterBaseline(store, n_clients)
+            base_lats = [l for ls in base.run(stage2) for l in ls]
+            bls = latency_stats(base_lats)
+            row(f"cluster_s{n_shards}_c{n_clients}_baseline",
+                bls["mean_us"], p95_us=bls["p95_us"])
+
+            store = gen.make_sharded_store(n_shards)
+            cluster = ClusterClient(store, ClusterConfig(
+                n_clients=n_clients, palpatine=palpatine_config()))
+            cluster.run(tenant_streams(gen, n_clients, n_tx, seed=3))
+            cluster.mine_all()
+            cluster.exchange_patterns()
+            cluster.reset_stats()
+            lats = [l for ls in cluster.run(stage2) for l in ls]
+            ls_ = latency_stats(lats)
+            agg = cluster.aggregate_stats()
+            per_shard = {
+                f"shard{j}_hr": s.hit_rate
+                for j, s in enumerate(cluster.per_shard_stats())
+            }
+            row(f"cluster_s{n_shards}_c{n_clients}_palpatine",
+                ls_["mean_us"], p95_us=ls_["p95_us"],
+                hit_rate=agg.hit_rate, precision=agg.precision,
+                speedup=bls["mean_us"] / ls_["mean_us"],
+                patterns=len(cluster.exchange.store),
+                col_patterns=len(cluster.exchange.col_store), **per_shard)
+
+
+if __name__ == "__main__":
+    main(quick=False)

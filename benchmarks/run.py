@@ -15,13 +15,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: mining,seqb,tpcc,dynamic,overhead,"
-                         "expert,kernels")
+                    help="comma list: mining,seqb,tpcc,cluster,dynamic,"
+                         "overhead,expert,kernels")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from . import (
+        bench_cluster,
         bench_dynamic,
         bench_expert_prefetch,
         bench_kernels,
@@ -35,6 +36,7 @@ def main() -> None:
         ("mining", bench_mining),           # Fig 1 + Fig 7 + §5.1 table
         ("seqb", bench_seqb),               # Figs 8, 10, 12, 15
         ("tpcc", bench_tpcc),               # Figs 9, 11, 13, 14, 16
+        ("cluster", bench_cluster),         # beyond-paper: sharded scale-out
         ("dynamic", bench_dynamic),         # Fig 17
         ("overhead", bench_overhead),       # Fig 18
         ("expert", bench_expert_prefetch),  # beyond-paper MoE prefetch

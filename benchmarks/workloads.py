@@ -21,6 +21,7 @@ from repro.core import (
     MiningParams,
     PalpatineClient,
     PalpatineConfig,
+    ShardedDKVStore,
     SimulatedDKVStore,
 )
 
@@ -61,11 +62,18 @@ class SEQB:
         w = ranks ** (-cfg.zipf_exp)
         self.seq_probs = w / w.sum()
 
+    def dataset(self):
+        return ((self.key(i), bytes(self.cfg.block_bytes))
+                for i in range(self.cfg.n_blocks))
+
     def make_store(self) -> SimulatedDKVStore:
         store = SimulatedDKVStore()
-        store.load(
-            (self.key(i), bytes(self.cfg.block_bytes))
-            for i in range(self.cfg.n_blocks))
+        store.load(self.dataset())
+        return store
+
+    def make_sharded_store(self, n_shards: int, **kw) -> ShardedDKVStore:
+        store = ShardedDKVStore(n_shards, **kw)
+        store.load(self.dataset())
         return store
 
     @staticmethod
@@ -147,8 +155,17 @@ class TPCC:
         return ("order_line", f"w{w}d{d}o{o}", f"l{l}")
 
     def make_store(self) -> SimulatedDKVStore:
-        cfg = self.cfg
         store = SimulatedDKVStore()
+        store.load(self.dataset())
+        return store
+
+    def make_sharded_store(self, n_shards: int, **kw) -> ShardedDKVStore:
+        store = ShardedDKVStore(n_shards, **kw)
+        store.load(self.dataset())
+        return store
+
+    def dataset(self) -> list:
+        cfg = self.cfg
         val = bytes(cfg.value_bytes)
         items = []
         for w in range(cfg.warehouses):
@@ -165,8 +182,7 @@ class TPCC:
             items.append((self.k_item(i), val))
             for w in range(cfg.warehouses):
                 items.append((self.k_stock(w, i), val))
-        store.load(items)
-        return store
+        return items
 
     # -- transactions as (op, key) sessions ----------------------------------
     def transaction(self, rng) -> list:

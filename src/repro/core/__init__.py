@@ -8,6 +8,14 @@ back store used by the paper-fidelity benchmarks.
 
 from .backstore import Clock, LatencyModel, SimulatedDKVStore
 from .cache import CacheStats, TwoSpaceCache
+from .cluster import (
+    ClusterBaseline,
+    ClusterClient,
+    ClusterConfig,
+    PatternExchange,
+    ShardedDKVStore,
+    ShardedTwoSpaceCache,
+)
 from .heuristics import HEURISTICS, HeuristicConfig, PrefetchEngine
 from .metastore import PatternMetastore
 from .mining import (
@@ -25,9 +33,11 @@ from .sessions import AccessLogger, Container, SequenceDatabase
 
 __all__ = [
     "AccessLogger", "ALGORITHMS", "BaselineClient", "CacheStats", "Clock",
-    "Container", "HEURISTICS", "HeuristicConfig", "LatencyModel",
-    "MiningParams", "Pattern", "PatternMetastore", "PalpatineClient",
-    "PalpatineConfig", "PrefetchEngine", "PTree", "PTreeIndex",
-    "SequenceDatabase", "SimulatedDKVStore", "TwoSpaceCache",
+    "ClusterBaseline", "ClusterClient", "ClusterConfig", "Container",
+    "HEURISTICS", "HeuristicConfig", "LatencyModel",
+    "MiningParams", "Pattern", "PatternExchange", "PatternMetastore",
+    "PalpatineClient", "PalpatineConfig", "PrefetchEngine", "PTree",
+    "PTreeIndex", "SequenceDatabase", "ShardedDKVStore",
+    "ShardedTwoSpaceCache", "SimulatedDKVStore", "TwoSpaceCache",
     "VerticalBitmaps", "brute_force", "mine", "mine_dynamic_minsup",
 ]

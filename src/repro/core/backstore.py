@@ -104,7 +104,16 @@ class SimulatedDKVStore:
         self.bytes_served += total
         return vals, self.latency.get(len(keys), total)
 
+    def contains(self, key) -> bool:
+        """Membership probe on store metadata (no data transfer, no latency
+        charge — the client library caches the schema/key range map)."""
+        return key in self.data
+
     # -- background channel (prefetch batches, async writes) --------------
+    def backlog(self, now: float) -> float:
+        """Outstanding work queued on the background channel, in seconds."""
+        return max(0.0, self.background_free_at - now)
+
     def background_get(self, keys: Sequence, now: float) -> tuple[list, float]:
         """Issue a batched get on the background channel at virtual time
         ``now``; returns (values, completion_time)."""
@@ -112,6 +121,19 @@ class SimulatedDKVStore:
         start = max(self.background_free_at, now)
         self.background_free_at = start + lat
         return vals, self.background_free_at
+
+    def background_multi_get(
+        self, keys: Sequence, now: float, backlog_cap: Optional[float] = None
+    ) -> tuple[list, list]:
+        """Store-agnostic prefetch API: batched background get returning
+        *per-key* completion times (a sharded store completes each key when
+        its owning node's batch lands).  With ``backlog_cap``, a batch whose
+        channel is backlogged past the cap is shed (values come back None) —
+        bounded I/O amplification, paper §1 'efficient'."""
+        if backlog_cap is not None and self.backlog(now) > backlog_cap:
+            return [None] * len(keys), [now] * len(keys)
+        vals, done = self.background_get(keys, now)
+        return vals, [done] * len(keys)
 
     def put(self, key, value: bytes, now: float) -> float:
         """Async write-behind: returns completion time on the write channel

@@ -1,0 +1,485 @@
+"""Sharded multi-node Palpatine cluster (beyond-paper scale axis).
+
+The paper evaluates one application-level cache in front of one DKV store;
+its design (client-side monitoring, a pattern metastore, probabilistic-tree
+prefetching) is explicitly meant for *distributed* stores serving many
+tenants.  This module scales the simulation out on both sides:
+
+* ``ShardedDKVStore`` — N simulated storage nodes behind a consistent-hash
+  ring (virtual nodes for balance).  Each node keeps its own latency model,
+  background prefetch channel, write-behind channel, and write monitor, so
+  contention, jitter, and coherence traffic are per node, like a real
+  region-server fleet.
+* ``ShardedTwoSpaceCache`` — a client's cache budget partitioned per shard
+  (one two-space LRU per storage node) so a hot shard's churn cannot evict
+  another shard's working set, and per-shard hit ratios are observable.
+* ``PatternExchange`` — mined patterns gossiped between clients through a
+  shared metastore held in *key space* (container keys, not per-client item
+  ids), so a cold client benefits from a warm one's mining — the paper's
+  metastore (§3.2), scaled out across tenants.
+* ``ClusterClient`` / ``ClusterBaseline`` — M concurrent client sessions
+  interleaved on their virtual clocks (always step the tenant whose clock
+  is furthest behind), with periodic pattern exchange.
+
+MITHRIL mines associations per server and GrASP stresses generalizing
+learned patterns across scalable transactional workloads (see PAPERS.md);
+the cluster combines both: per-client mining, cluster-wide pattern reuse.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import hashlib
+import heapq
+from typing import Callable, Iterable, Optional, Sequence
+
+from .backstore import LatencyModel, SimulatedDKVStore
+from .cache import CacheStats, TwoSpaceCache
+from .metastore import PatternMetastore
+from .mining import Pattern
+from .palpatine import BaselineClient, PalpatineClient, PalpatineConfig
+from .ptree import PTreeIndex
+
+__all__ = [
+    "ShardedDKVStore",
+    "ShardedTwoSpaceCache",
+    "PatternExchange",
+    "ClusterConfig",
+    "ClusterClient",
+    "ClusterBaseline",
+    "sum_stats",
+]
+
+
+def _hash64(x) -> int:
+    """Stable 64-bit hash of a container key (process-independent, unlike
+    builtin ``hash`` which is salted per process)."""
+    return int.from_bytes(
+        hashlib.blake2b(repr(x).encode(), digest_size=8).digest(), "big")
+
+
+def sum_stats(stats: Iterable[CacheStats]) -> CacheStats:
+    """Aggregate CacheStats counters (per-shard or per-tenant roll-up)."""
+    agg = CacheStats()
+    for s in stats:
+        for f in dataclasses.fields(CacheStats):
+            setattr(agg, f.name, getattr(agg, f.name) + getattr(s, f.name))
+    return agg
+
+
+# ---------------------------------------------------------------------------
+# Sharded back store
+# ---------------------------------------------------------------------------
+
+
+class ShardedDKVStore:
+    """N simulated storage nodes behind a consistent-hash ring.
+
+    Exposes the same client-facing surface as ``SimulatedDKVStore`` (get /
+    multi_get / put / load / contains / watch / backlog /
+    background_multi_get) so ``PalpatineClient`` and ``BaselineClient`` run
+    against it unchanged.
+    """
+
+    def __init__(self, n_shards: int = 4,
+                 latencies: Optional[Sequence[LatencyModel]] = None,
+                 vnodes: int = 64):
+        if latencies is None:
+            latencies = [LatencyModel(seed=1009 + i) for i in range(n_shards)]
+        if len(latencies) != n_shards:
+            raise ValueError("need one LatencyModel per shard")
+        self.n_shards = int(n_shards)
+        self.shards = [SimulatedDKVStore(l) for l in latencies]
+        ring = []
+        for s in range(self.n_shards):
+            for v in range(vnodes):
+                ring.append((_hash64(f"shard{s}:vnode{v}"), s))
+        ring.sort()
+        self._points = [p for p, _ in ring]
+        self._owners = [s for _, s in ring]
+
+    # -- placement ---------------------------------------------------------
+    def shard_of(self, key) -> int:
+        """Owning node: first virtual node clockwise from the key's point."""
+        i = bisect.bisect_right(self._points, _hash64(key)) % len(self._points)
+        return self._owners[i]
+
+    def _group(self, keys: Sequence) -> dict[int, list[int]]:
+        by_shard: dict[int, list[int]] = {}
+        for pos, k in enumerate(keys):
+            by_shard.setdefault(self.shard_of(k), []).append(pos)
+        return by_shard
+
+    # -- population --------------------------------------------------------
+    def load(self, items: Iterable[tuple]) -> None:
+        for k, v in items:
+            self.shards[self.shard_of(k)].data[k] = v
+
+    def contains(self, key) -> bool:
+        return self.shards[self.shard_of(key)].contains(key)
+
+    # -- foreground (demand) path ------------------------------------------
+    def get(self, key) -> tuple:
+        return self.shards[self.shard_of(key)].get(key)
+
+    def multi_get(self, keys: Sequence) -> tuple[list, float]:
+        """Scatter-gather: per-node sub-batches run in parallel; the caller
+        waits for the slowest node."""
+        vals: list = [None] * len(keys)
+        worst = 0.0
+        for shard, positions in self._group(keys).items():
+            sub, lat = self.shards[shard].multi_get([keys[p] for p in positions])
+            for p, v in zip(positions, sub):
+                vals[p] = v
+            worst = max(worst, lat)
+        return vals, worst
+
+    # -- background channels -----------------------------------------------
+    def backlog(self, now: float) -> float:
+        """Least-loaded node's backlog: prefetching is only fully shed when
+        *every* node's background channel is saturated (per-node shedding
+        happens inside :meth:`background_multi_get`)."""
+        return min(s.backlog(now) for s in self.shards)
+
+    def background_multi_get(
+        self, keys: Sequence, now: float, backlog_cap: Optional[float] = None
+    ) -> tuple[list, list]:
+        """Split the batch per owning node; each node serves its sub-batch
+        on its own background channel (concurrently across nodes), so every
+        key completes when *its* node's batch lands.  Nodes backlogged past
+        ``backlog_cap`` shed their sub-batch only."""
+        vals: list = [None] * len(keys)
+        done: list = [now] * len(keys)
+        for shard, positions in self._group(keys).items():
+            node = self.shards[shard]
+            if backlog_cap is not None and node.backlog(now) > backlog_cap:
+                continue
+            sub, done_at = node.background_get([keys[p] for p in positions], now)
+            for p, v in zip(positions, sub):
+                vals[p] = v
+                done[p] = done_at
+        return vals, done
+
+    def put(self, key, value: bytes, now: float) -> float:
+        return self.shards[self.shard_of(key)].put(key, value, now)
+
+    # -- coherence ---------------------------------------------------------
+    def watch(self, callback: Callable) -> None:
+        """Each node runs its own write monitor; a cluster watcher hears
+        writes from all of them."""
+        for s in self.shards:
+            s.watch(callback)
+
+    # -- aggregate telemetry ----------------------------------------------
+    @property
+    def gets(self) -> int:
+        return sum(s.gets for s in self.shards)
+
+    @property
+    def bytes_served(self) -> int:
+        return sum(s.bytes_served for s in self.shards)
+
+    def per_shard_gets(self) -> list[int]:
+        return [s.gets for s in self.shards]
+
+
+# ---------------------------------------------------------------------------
+# Per-shard two-space cache
+# ---------------------------------------------------------------------------
+
+
+class ShardedTwoSpaceCache:
+    """A client's cache budget split into one ``TwoSpaceCache`` per storage
+    node.  Palpatine keys its cache by per-client item id; ``key_of`` maps
+    an item id back to its container key and ``shard_of`` places the key,
+    so each entry lives in (and can only evict from) its shard's partition.
+    """
+
+    def __init__(self, n_shards: int, total_bytes: int,
+                 preemptive_frac: float,
+                 key_of: Callable[[int], object],
+                 shard_of: Callable[[object], int]):
+        per_shard = int(total_bytes) // max(1, int(n_shards))
+        self.spaces = [TwoSpaceCache(per_shard, preemptive_frac)
+                       for _ in range(n_shards)]
+        self.key_of = key_of
+        self.shard_of = shard_of
+        self._placement: dict = {}   # iid -> space (ids never change shard)
+
+    def _space(self, iid) -> TwoSpaceCache:
+        space = self._placement.get(iid)
+        if space is None:
+            space = self.spaces[self.shard_of(self.key_of(iid))]
+            self._placement[iid] = space
+        return space
+
+    # -- TwoSpaceCache surface --------------------------------------------
+    def lookup(self, key, now: float = 0.0):
+        return self._space(key).lookup(key, now)
+
+    def contains(self, key) -> bool:
+        return self._space(key).contains(key)
+
+    def put_demand(self, key, value, size: int) -> None:
+        self._space(key).put_demand(key, value, size)
+
+    def put_prefetch(self, key, value, size: int, available_at: float) -> bool:
+        return self._space(key).put_prefetch(key, value, size, available_at)
+
+    def write(self, key, value, size: int) -> None:
+        self._space(key).write(key, value, size)
+
+    def invalidate(self, key) -> None:
+        self._space(key).invalidate(key)
+
+    # -- stats -------------------------------------------------------------
+    @property
+    def stats(self) -> CacheStats:
+        return sum_stats(s.stats for s in self.spaces)
+
+    @stats.setter
+    def stats(self, value: CacheStats) -> None:
+        # aggregated counters cannot be re-distributed over partitions, so
+        # only the reset idiom `cache.stats = CacheStats()` is supported
+        if any(getattr(value, f.name) for f in dataclasses.fields(CacheStats)):
+            raise ValueError(
+                "a sharded cache's stats can only be reset with a fresh "
+                "CacheStats, not overwritten with accumulated counters")
+        for s in self.spaces:
+            s.stats = CacheStats()
+
+    def per_shard_stats(self) -> list[CacheStats]:
+        return [s.stats for s in self.spaces]
+
+
+# ---------------------------------------------------------------------------
+# Pattern exchange (gossiped metastore)
+# ---------------------------------------------------------------------------
+
+
+class PatternExchange:
+    """Cluster-wide pattern metastore, held in container-*key* space.
+
+    Each client's item ids are private to its own vocabulary, so patterns
+    are decoded to container keys on publish and re-encoded into the
+    subscriber's vocabulary on pull (growing it as needed).  Merging keeps
+    the highest support seen for a sequence anywhere in the cluster.  Both
+    pattern families are gossiped: row-level (main metastore) and the
+    generalized ``(table, *, column)`` patterns of hybrid column mining
+    (paper §3.1 type 1) — the latter matter most on workloads like TPC-C
+    where concrete rows rarely repeat across tenants.
+    """
+
+    def __init__(self, capacity: int = 10_000, max_pattern_len: int = 15):
+        self.store = PatternMetastore(capacity, max_pattern_len)
+        self.col_store = PatternMetastore(capacity, max_pattern_len)
+        self.publishes = 0
+        self.pulls = 0
+
+    def publish(self, client: PalpatineClient) -> int:
+        pats = [Pattern(client.logger.db.decode(p.items), p.support)
+                for p in client.metastore]
+        if pats:
+            self.store.merge(pats)
+        col_pats = []
+        if client.col_metastore is not None:
+            col_pats = [Pattern(client.col_logger.db.decode(p.items), p.support)
+                        for p in client.col_metastore]
+            if col_pats:
+                self.col_store.merge(col_pats)
+        if pats or col_pats:
+            self.publishes += 1
+        return len(pats) + len(col_pats)
+
+    def pull(self, client: PalpatineClient) -> int:
+        """Merge the cluster's patterns into ``client`` and rebuild its
+        probabilistic trees — a cold client warms up from its peers."""
+        n = 0
+        if len(self.store):
+            local = [Pattern(client.logger.db.encode(p.items), p.support)
+                     for p in self.store]
+            client.metastore.merge(local)
+            client.engine.replace_index(PTreeIndex.build(client.metastore))
+            n += len(local)
+        if len(self.col_store) and client.cfg.column_mining:
+            if client.col_metastore is None:
+                client.col_metastore = PatternMetastore(
+                    self.col_store.capacity, self.col_store.max_pattern_len)
+            local = [Pattern(client.col_logger.db.encode(p.items), p.support)
+                     for p in self.col_store]
+            client.col_metastore.merge(local)
+            client.col_engine.replace_index(
+                PTreeIndex.build(client.col_metastore))
+            n += len(local)
+        if n:
+            self.pulls += 1
+        return n
+
+    def __len__(self) -> int:
+        return len(self.store) + len(self.col_store)
+
+
+# ---------------------------------------------------------------------------
+# Interleaved multi-client drivers
+# ---------------------------------------------------------------------------
+
+
+def _apply_op(client, op):
+    """One workload op: a bare key (read), ('r', key), or ('w', key[, value]).
+    Returns (kind, latency, value)."""
+    if isinstance(op, tuple) and len(op) >= 2 and op[0] in ("r", "w"):
+        if op[0] == "w":
+            value = op[2] if len(op) > 2 else b"x" * 64
+            return "w", client.write(op[1], value), None
+        value, lat = client.read(op[1])
+        return "r", lat, value
+    value, lat = client.read(op)
+    return "r", lat, value
+
+
+def _interleave(tenants: Sequence, streams: Sequence[Iterable],
+                think_time: float,
+                on_op: Optional[Callable[[], None]] = None,
+                collect_values: bool = False):
+    """Run each tenant's session stream, always stepping the tenant whose
+    virtual clock is furthest behind — M concurrent clients sharing the
+    store's per-node channels, without wall-clock threads."""
+    n = len(tenants)
+    sess_iters = [iter(s) for s in streams]
+    ops: list[list] = [[] for _ in range(n)]
+    pos = [0] * n
+    lats: list[list[float]] = [[] for _ in range(n)]
+    vals: Optional[list[list]] = [[] for _ in range(n)] if collect_values else None
+
+    def refill(i: int) -> bool:
+        while pos[i] >= len(ops[i]):
+            nxt = next(sess_iters[i], None)
+            if nxt is None:
+                return False
+            ops[i] = list(nxt)
+            pos[i] = 0
+        return True
+
+    heap = []
+    for i, t in enumerate(tenants):
+        if refill(i):
+            heapq.heappush(heap, (t.clock.now, i))
+    while heap:
+        _, i = heapq.heappop(heap)
+        t = tenants[i]
+        op = ops[i][pos[i]]
+        pos[i] += 1
+        kind, lat, value = _apply_op(t, op)
+        if kind == "r":
+            lats[i].append(lat)
+            if vals is not None:
+                vals[i].append(value)
+        if on_op is not None:
+            on_op()
+        if pos[i] >= len(ops[i]):
+            if hasattr(t, "end_session"):
+                t.end_session()
+            t.clock.advance(think_time)
+        if refill(i):
+            heapq.heappush(heap, (t.clock.now, i))
+    return lats, vals
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    n_clients: int = 4
+    palpatine: PalpatineConfig = dataclasses.field(default_factory=PalpatineConfig)
+    shard_caches: bool = True            # per-shard two-space caches
+    exchange_every_ops: Optional[int] = 2_000   # gossip period (cluster ops)
+    exchange_capacity: int = 10_000
+    think_time: float = 1e-3             # virtual gap between sessions
+
+
+class ClusterClient:
+    """M concurrent ``PalpatineClient`` tenants against a sharded store.
+
+    Every tenant has its own virtual clock, monitor, miner, and cache (so
+    tenants are isolated); they share the store's per-node channels and the
+    gossiped pattern metastore.
+    """
+
+    def __init__(self, store: ShardedDKVStore,
+                 cfg: Optional[ClusterConfig] = None):
+        self.store = store
+        self.cfg = cfg or ClusterConfig()
+        pcfg = self.cfg.palpatine
+        self.exchange = PatternExchange(self.cfg.exchange_capacity,
+                                        pcfg.mining.max_len)
+        factory = None
+        if self.cfg.shard_caches:
+            def factory(client: PalpatineClient) -> ShardedTwoSpaceCache:
+                return ShardedTwoSpaceCache(
+                    store.n_shards, pcfg.cache_bytes, pcfg.preemptive_frac,
+                    key_of=client.logger.db.item, shard_of=store.shard_of)
+        self.tenants = [PalpatineClient(store, pcfg, cache_factory=factory)
+                        for _ in range(self.cfg.n_clients)]
+        self.total_ops = 0
+
+    # -- driving -----------------------------------------------------------
+    def run(self, streams: Sequence[Iterable], collect_values: bool = False):
+        """``streams[i]`` is tenant i's iterable of sessions (lists of ops).
+        Returns per-tenant read latencies; with ``collect_values`` also the
+        per-tenant observed values."""
+        if len(streams) != len(self.tenants):
+            raise ValueError("one session stream per tenant")
+
+        def on_op() -> None:
+            self.total_ops += 1
+            every = self.cfg.exchange_every_ops
+            if every and self.total_ops % every == 0:
+                self.exchange_patterns()
+
+        lats, vals = _interleave(self.tenants, streams, self.cfg.think_time,
+                                 on_op, collect_values)
+        return (lats, vals) if collect_values else lats
+
+    # -- mining + gossip ---------------------------------------------------
+    def mine_all(self) -> int:
+        return sum(t.mine_now() for t in self.tenants)
+
+    def exchange_patterns(self) -> None:
+        """One gossip round: everyone publishes, then everyone pulls."""
+        for t in self.tenants:
+            self.exchange.publish(t)
+        for t in self.tenants:
+            self.exchange.pull(t)
+
+    # -- telemetry ---------------------------------------------------------
+    def reset_stats(self) -> None:
+        for t in self.tenants:
+            t.cache.stats = CacheStats()
+
+    def aggregate_stats(self) -> CacheStats:
+        return sum_stats(t.cache.stats for t in self.tenants)
+
+    def per_shard_stats(self) -> list[CacheStats]:
+        """Per-storage-node cache stats summed over tenants (needs
+        ``shard_caches``)."""
+        out = []
+        for shard in range(self.store.n_shards):
+            out.append(sum_stats(
+                t.cache.per_shard_stats()[shard] for t in self.tenants))
+        return out
+
+
+class ClusterBaseline:
+    """M unmodified clients interleaved the same way — the scaling baseline."""
+
+    def __init__(self, store: ShardedDKVStore, n_clients: int,
+                 think_time: float = 1e-3):
+        self.store = store
+        self.tenants = [BaselineClient(store) for _ in range(n_clients)]
+        self.think_time = think_time
+
+    def run(self, streams: Sequence[Iterable], collect_values: bool = False):
+        if len(streams) != len(self.tenants):
+            raise ValueError("one session stream per tenant")
+        lats, vals = _interleave(self.tenants, streams, self.think_time,
+                                 collect_values=collect_values)
+        return (lats, vals) if collect_values else lats

@@ -32,6 +32,21 @@ class PatternMetastore:
         self.patterns = pats[: self.capacity]
         self.generation += 1
 
+    def merge(self, patterns: Iterable[Pattern]) -> None:
+        """Gossip merge (cluster pattern exchange): union by items, keeping
+        the highest observed support per sequence, then re-rank and truncate
+        to capacity."""
+        best: dict = {p.items: p for p in self.patterns}
+        for p in patterns:
+            if len(p.items) > self.max_pattern_len:
+                continue
+            q = best.get(p.items)
+            if q is None or p.support > q.support:
+                best[p.items] = p
+        pats = sorted(best.values(), key=self.rank, reverse=True)
+        self.patterns = pats[: self.capacity]
+        self.generation += 1
+
     def add_apriori(self, sequences: Sequence[Sequence[int]], support: int = 1) -> None:
         """Paper §4.1: apriori-known sequences may be stored alongside the
         mined ones."""

@@ -62,12 +62,16 @@ class PalpatineClient:
     """Drop-in DKV client with monitoring, mining, prefetching and caching."""
 
     def __init__(self, store: SimulatedDKVStore, config: Optional[PalpatineConfig] = None,
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None, cache_factory=None):
         self.store = store
         self.cfg = config or PalpatineConfig()
         self.clock = clock or Clock()
-        self.cache = TwoSpaceCache(self.cfg.cache_bytes, self.cfg.preemptive_frac)
         self.logger = AccessLogger(self.cfg.session_gap)
+        # cache_factory(self) may build any TwoSpaceCache-shaped object that
+        # needs the client's own state — e.g. the cluster's per-shard cache
+        # maps item ids back to keys through this client's vocabulary
+        self.cache = (cache_factory(self) if cache_factory is not None else
+                      TwoSpaceCache(self.cfg.cache_bytes, self.cfg.preemptive_frac))
         self.metastore = PatternMetastore(self.cfg.metastore_capacity,
                                           self.cfg.mining.max_len)
         self.engine = PrefetchEngine(PTreeIndex.build([]), self.cfg.heuristic)
@@ -78,6 +82,7 @@ class PalpatineClient:
         self.col_engine = PrefetchEngine(
             PTreeIndex.build([]),
             HeuristicConfig("fetch_progressive", progressive_depth=2))
+        self.col_metastore: Optional[PatternMetastore] = None
         self._ops_since_mine = 0
         self.mining_runs = 0
         self.mining_wall_time = 0.0
@@ -213,13 +218,13 @@ class PalpatineClient:
         targets = self.col_engine.on_request(gen_iid)
         if not targets:
             return
-        if self.store.background_free_at - now > self.cfg.backlog_cap:
+        if self.store.backlog(now) > self.cfg.backlog_cap:
             return
         concrete = []
         for t in targets:
             table, _, col = self.col_logger.db.item(t)
             ckey = (table, row, col)
-            if ckey not in self.store.data:
+            if not self.store.contains(ckey):
                 continue
             iid = self.logger.db.item_id(ckey)
             if not self.cache.contains(iid):
@@ -227,8 +232,9 @@ class PalpatineClient:
         for i in range(0, len(concrete), self.cfg.prefetch_batch):
             batch = concrete[i:i + self.cfg.prefetch_batch]
             keys = [k for _, k in batch]
-            vals, done_at = self.store.background_get(keys, now)
-            for (iid, _), v in zip(batch, vals):
+            vals, done_ats = self.store.background_multi_get(
+                keys, now, self.cfg.backlog_cap)
+            for (iid, _), v, done_at in zip(batch, vals, done_ats):
                 if v is not None:
                     self.cache.put_prefetch(iid, v, len(v), done_at)
 
@@ -236,14 +242,16 @@ class PalpatineClient:
     # Prefetching (background, §4.1 step j / §4.5 batching)
     # ------------------------------------------------------------------
     def _prefetch(self, iid: int, now: float) -> None:
-        if self.store.background_free_at - now > self.cfg.backlog_cap:
-            return  # background channel saturated: shed prefetch load
+        if self.store.backlog(now) > self.cfg.backlog_cap:
+            return  # background channel(s) saturated: shed prefetch load
         wanted = [i for i in self.engine.on_request(iid)
                   if not self.cache.contains(i)]
         if not wanted:
             return
         # First wave item goes unbatched (anticipate the next request,
-        # §4.5); the rest batched per prefetch_batch.
+        # §4.5); the rest batched per prefetch_batch.  A sharded store
+        # splits each batch per owning node and sheds per-node past the
+        # backlog cap; completion times are per key.
         batches = [wanted[:1]]
         rest = wanted[1:]
         for i in range(0, len(rest), self.cfg.prefetch_batch):
@@ -252,8 +260,9 @@ class PalpatineClient:
             if not batch:
                 continue
             keys = [self._store_key_by_id(i) for i in batch]
-            vals, done_at = self.store.background_get(keys, now)
-            for i, v in zip(batch, vals):
+            vals, done_ats = self.store.background_multi_get(
+                keys, now, self.cfg.backlog_cap)
+            for i, v, done_at in zip(batch, vals, done_ats):
                 if v is not None:
                     self.cache.put_prefetch(i, v, len(v), done_at)
 

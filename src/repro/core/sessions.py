@@ -72,6 +72,17 @@ class SequenceDatabase:
     def n_items(self) -> int:
         return len(self._items)
 
+    # -- key-space translation (pattern exchange between clients) ----------
+    def decode(self, item_ids: Iterable[int]) -> tuple:
+        """Translate item ids to container keys — vocabulary-independent
+        form, so a pattern can leave this client (gossip, persistence)."""
+        return tuple(self._items[i] for i in item_ids)
+
+    def encode(self, keys: Iterable) -> tuple:
+        """Translate container keys to this database's item ids, growing
+        the vocabulary for keys not seen locally yet."""
+        return tuple(self.item_id(k) for k in keys)
+
     def __len__(self) -> int:
         return len(self.sessions)
 

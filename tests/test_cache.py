@@ -1,7 +1,11 @@
 """Two-space cache invariants (paper §4.4)."""
 
+import pytest
+
 from repro.core import TwoSpaceCache
 from repro.core.cache import LRUSpace, _Entry
+
+pytestmark = pytest.mark.tier1
 
 
 def test_lru_eviction_order():

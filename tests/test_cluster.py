@@ -1,0 +1,318 @@
+"""End-to-end tests for the sharded multi-node cluster: shard-count
+transparency, pattern-exchange benefit, tenant isolation, and cross-tenant
+coherence."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterBaseline,
+    ClusterClient,
+    ClusterConfig,
+    HeuristicConfig,
+    LatencyModel,
+    MiningParams,
+    PalpatineConfig,
+    PatternExchange,
+    ShardedDKVStore,
+)
+
+pytestmark = pytest.mark.tier1
+
+N_KEYS = 300
+VALUE_PAD = 64  # value bytes, so caches actually fill and evict
+
+
+def flat_latency(i: int) -> LatencyModel:
+    """Deterministic latency (no jitter/stalls) for replayable runs."""
+    return LatencyModel(jitter_sigma=0.0, stall_frac=0.0, seed=i)
+
+
+def value_of(key) -> bytes:
+    return ("val:" + "/".join(map(str, key))).encode().ljust(VALUE_PAD, b".")
+
+
+def make_store(n_shards, deterministic=True):
+    store = ShardedDKVStore(
+        n_shards,
+        latencies=[flat_latency(i) for i in range(n_shards)] if deterministic else None,
+    )
+    store.load(((("t", f"r{i}", "c"), value_of(("t", f"r{i}", "c")))
+                for i in range(N_KEYS)))
+    return store
+
+
+PLANTED = tuple(
+    tuple(np.random.default_rng(s).choice(N_KEYS, size=5, replace=False))
+    for s in range(10)
+)
+
+
+def stream(seed, n_sessions=120, p_pattern=0.8):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_sessions):
+        if rng.random() < p_pattern:
+            base = PLANTED[int(rng.integers(0, len(PLANTED)))]
+        else:
+            base = rng.integers(0, N_KEYS, size=5)
+        out.append([("t", f"r{int(i)}", "c") for i in base])
+    return out
+
+
+def small_palpatine(cache_bytes=8 * 1024, preemptive_frac=0.25):
+    # deliberately small vs the hot set, so eviction and prefetch both occur
+    return PalpatineConfig(
+        heuristic=HeuristicConfig("fetch_progressive"),
+        cache_bytes=cache_bytes,
+        preemptive_frac=preemptive_frac,
+        mining=MiningParams(minsup=0.02, min_len=3, max_len=10, maxgap=1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sharding layer
+# ---------------------------------------------------------------------------
+
+
+def test_ring_placement_is_stable_and_total():
+    a, b = ShardedDKVStore(4), ShardedDKVStore(4)
+    keys = [("t", f"r{i}", "c") for i in range(500)]
+    for k in keys:
+        s = a.shard_of(k)
+        assert 0 <= s < 4
+        assert s == b.shard_of(k)  # same ring across instances
+
+
+def test_shards_are_reasonably_balanced():
+    store = make_store(n_shards=4)
+    sizes = [len(s.data) for s in store.shards]
+    assert sum(sizes) == N_KEYS
+    assert min(sizes) > 0 and max(sizes) < N_KEYS * 0.6
+
+
+def test_get_put_contains_route_to_the_owning_shard():
+    store = make_store(4)
+    key = ("t", "r7", "c")
+    owner = store.shard_of(key)
+    assert store.contains(key)
+    store.put(key, b"new", now=0.0)
+    assert store.shards[owner].data[key] == b"new"
+    assert all(key not in s.data for i, s in enumerate(store.shards) if i != owner)
+    assert store.get(key)[0] == b"new"
+
+
+def test_background_multi_get_sheds_per_shard_only():
+    store = make_store(2)
+    k_by_shard = {}
+    for i in range(N_KEYS):
+        k = ("t", f"r{i}", "c")
+        k_by_shard.setdefault(store.shard_of(k), k)
+        if len(k_by_shard) == 2:
+            break
+    # saturate shard 0's background channel only
+    store.shards[0].background_free_at = 10.0
+    vals, done = store.background_multi_get(
+        [k_by_shard[0], k_by_shard[1]], now=0.0, backlog_cap=0.05)
+    assert vals[0] is None            # shed: shard 0 over the cap
+    assert vals[1] is not None        # shard 1 still serves
+    assert done[1] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Shard-count transparency: same workload, same values, any shard count
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_clients", [1, 3])
+def test_values_identical_across_shard_counts(n_clients):
+    observed = {}
+    for n_shards in (1, 4):
+        cluster = ClusterClient(make_store(n_shards), ClusterConfig(
+            n_clients=n_clients, palpatine=small_palpatine()))
+        streams = [stream(100 + t, n_sessions=60) for t in range(n_clients)]
+        cluster.run(streams)
+        cluster.mine_all()
+        cluster.exchange_patterns()
+        _, vals = cluster.run(
+            [stream(200 + t, n_sessions=60) for t in range(n_clients)],
+            collect_values=True)
+        observed[n_shards] = vals
+        for tenant_vals, tenant_stream in zip(vals, [stream(200 + t, 60) for t in range(n_clients)]):
+            expected = [value_of(k) for sess in tenant_stream for k in sess]
+            assert tenant_vals == expected  # correct values, never corrupted
+    assert observed[1] == observed[4]       # sharding is transparent
+
+
+# ---------------------------------------------------------------------------
+# Pattern exchange: cold tenants benefit from warm ones
+# ---------------------------------------------------------------------------
+
+
+def _cold_tenant_run(exchange: bool):
+    cluster = ClusterClient(make_store(4), ClusterConfig(
+        n_clients=2, exchange_every_ops=None, palpatine=small_palpatine()))
+    warm, cold = cluster.tenants
+    # only the warm tenant observes traffic and mines
+    cluster.run([stream(1, n_sessions=150), []])
+    cluster.mine_all()
+    assert len(warm.metastore) > 0
+    assert len(cold.metastore) == 0
+    if exchange:
+        cluster.exchange_patterns()
+    cluster.reset_stats()
+    cluster.run([[], stream(2, n_sessions=100)])
+    return cluster, cold
+
+
+def test_exchange_lifts_cold_client_hit_ratio():
+    _, cold_without = _cold_tenant_run(exchange=False)
+    cluster, cold_with = _cold_tenant_run(exchange=True)
+    assert cold_with.stats.prefetches > 0
+    assert cold_with.stats.prefetch_hits > 0
+    # aggregate hit ratio is monotone non-decreasing once patterns flow
+    assert cold_with.stats.hit_rate >= cold_without.stats.hit_rate
+    assert cluster.aggregate_stats().hits >= cold_with.stats.hits
+
+
+def test_exchange_translates_patterns_across_vocabularies():
+    cluster = ClusterClient(make_store(2), ClusterConfig(
+        n_clients=2, exchange_every_ops=None, palpatine=small_palpatine()))
+    warm, cold = cluster.tenants
+    # make the two vocabularies disagree: the cold tenant sees keys in a
+    # different order first
+    for i in (50, 40, 30, 20, 10):
+        cold.read(("t", f"r{i}", "c"))
+    cluster.run([stream(1, n_sessions=150), []])
+    cluster.mine_all()
+    cluster.exchange_patterns()
+    # every pulled pattern decodes to the same container keys on both sides
+    warm_keys = {warm.logger.db.decode(p.items) for p in warm.metastore}
+    cold_keys = {cold.logger.db.decode(p.items) for p in cold.metastore}
+    assert warm_keys and warm_keys <= cold_keys
+
+
+def test_exchange_gossips_column_patterns_to_cold_tenants():
+    """Hybrid column mining (§3.1 type 1) generalizes across rows; those
+    generalized patterns must gossip too — on row-diverse workloads they
+    are the only ones that transfer."""
+    import dataclasses
+
+    store = ShardedDKVStore(2, latencies=[flat_latency(i) for i in range(2)])
+    cols = ("profile", "photo", "friends", "feed")
+    store.load(((("users", f"u{i}", c), value_of(("users", f"u{i}", c)))
+                for i in range(200) for c in cols))
+    pcfg = dataclasses.replace(small_palpatine(), column_mining=True)
+    cluster = ClusterClient(store, ClusterConfig(
+        n_clients=2, exchange_every_ops=None, palpatine=pcfg))
+    warm, cold = cluster.tenants
+    rng = np.random.default_rng(0)
+    warm_stream = [[("users", f"u{int(rng.integers(0, 200))}", c) for c in cols]
+                   for _ in range(150)]
+    cluster.run([warm_stream, []])
+    cluster.mine_all()
+    assert warm.col_metastore is not None and len(warm.col_metastore) > 0
+    assert cold.col_metastore is None or len(cold.col_metastore) == 0
+    cluster.exchange_patterns()
+    assert cold.col_metastore is not None and len(cold.col_metastore) > 0
+    assert len(cold.col_engine.index.trees) > 0
+    # the generalized keys decode identically on both sides
+    warm_keys = {warm.col_logger.db.decode(p.items) for p in warm.col_metastore}
+    cold_keys = {cold.col_logger.db.decode(p.items) for p in cold.col_metastore}
+    assert warm_keys <= cold_keys
+
+
+def test_sharded_cache_stats_setter_only_supports_reset():
+    cluster = ClusterClient(make_store(2), ClusterConfig(
+        n_clients=1, palpatine=small_palpatine()))
+    (tenant,) = cluster.tenants
+    tenant.read(("t", "r1", "c"))
+    assert tenant.cache.stats.accesses == 1
+    with pytest.raises(ValueError):
+        tenant.cache.stats = tenant.cache.stats  # can't write back aggregates
+    from repro.core import CacheStats
+
+    tenant.cache.stats = CacheStats()
+    assert tenant.cache.stats.accesses == 0
+
+
+def test_exchange_merge_keeps_max_support():
+    ex = PatternExchange(capacity=100)
+    from repro.core import Pattern
+
+    ex.store.merge([Pattern((("t", "a", "c"), ("t", "b", "c")), 3)])
+    ex.store.merge([Pattern((("t", "a", "c"), ("t", "b", "c")), 9),
+                    Pattern((("t", "x", "c"), ("t", "y", "c")), 2)])
+    by_items = {p.items: p.support for p in ex.store}
+    assert by_items[(("t", "a", "c"), ("t", "b", "c"))] == 9
+    assert len(by_items) == 2
+
+
+# ---------------------------------------------------------------------------
+# Tenant isolation + cross-tenant coherence
+# ---------------------------------------------------------------------------
+
+
+def test_tenants_never_observe_each_others_values():
+    """Each tenant reads its own namespace; every value must carry the
+    tenant's own tag, no matter how the caches interleave."""
+    n_tenants, per = 3, 80
+    store = ShardedDKVStore(4, latencies=[flat_latency(i) for i in range(4)])
+    for t in range(n_tenants):
+        store.load(((("t", f"tenant{t}-r{i}", "c"), f"tenant{t}:v{i}".encode())
+                    for i in range(per)))
+    cluster = ClusterClient(store, ClusterConfig(
+        n_clients=n_tenants, palpatine=small_palpatine()))
+    streams = []
+    for t in range(n_tenants):
+        rng = np.random.default_rng(t)
+        streams.append([
+            [("t", f"tenant{t}-r{int(i)}", "c")
+             for i in rng.integers(0, per, size=5)]
+            for _ in range(60)
+        ])
+    _, vals = cluster.run(streams, collect_values=True)
+    for t, tenant_vals in enumerate(vals):
+        assert tenant_vals, "tenant saw no traffic"
+        for v in tenant_vals:
+            assert v.startswith(f"tenant{t}:".encode())
+
+
+def test_cross_tenant_write_invalidates_other_tenants_cache():
+    store = make_store(4)
+    cluster = ClusterClient(store, ClusterConfig(
+        n_clients=2, palpatine=small_palpatine()))
+    a, b = cluster.tenants
+    key = ("t", "r5", "c")
+    b.read(key)
+    iid = b.logger.db.item_id(key)
+    assert b.cache.contains(iid)
+    a.write(key, b"from-a")          # store monitor notifies every tenant
+    assert not b.cache.contains(iid)
+    assert b.read(key)[0] == b"from-a"
+    # the writer's own cache kept its write-through copy
+    assert a.read(key)[0] == b"from-a"
+
+
+# ---------------------------------------------------------------------------
+# Cluster Palpatine still beats the cluster baseline
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_palpatine_beats_cluster_baseline():
+    n_clients = 2
+    stage2 = [stream(300 + t, n_sessions=80) for t in range(n_clients)]
+    base = ClusterBaseline(make_store(4), n_clients)
+    base_lats = [l for ls in base.run(stage2) for l in ls]
+
+    cluster = ClusterClient(make_store(4), ClusterConfig(
+        n_clients=n_clients, palpatine=small_palpatine(cache_bytes=4 * 1024)))
+    cluster.run([stream(400 + t, n_sessions=120) for t in range(n_clients)])
+    cluster.mine_all()
+    cluster.exchange_patterns()
+    cluster.reset_stats()
+    pal_lats = [l for ls in cluster.run(stage2) for l in ls]
+
+    assert np.mean(pal_lats) < np.mean(base_lats)
+    agg = cluster.aggregate_stats()
+    assert agg.prefetches > 0 and agg.hit_rate > 0.2

@@ -1,0 +1,127 @@
+"""Differential tests: every miner agrees with the exhaustive oracle.
+
+Deterministic randomized databases (seeded numpy generators — no optional
+dependencies, unlike the hypothesis twins in test_properties.py) swept over
+``maxgap``, ``minsup``, and length bounds.
+
+Semantics under test:
+* ``spam`` / ``prefixspan`` / ``gsp`` return *all* frequent sequential
+  patterns with exact oracle support;
+* ``vmsp`` returns exactly the maximal subset of the oracle's patterns;
+* ``maximal_filter`` output is verified maximal under both inclusion
+  relations (contiguous-window for maxgap=1, subsequence otherwise).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ALGORITHMS, MiningParams, Pattern, SequenceDatabase, brute_force
+from repro.core.mining import maximal_filter
+
+pytestmark = pytest.mark.tier1
+
+
+def random_db(seed, n_sessions=None, alphabet=6, max_len=12):
+    rng = np.random.default_rng(seed)
+    n = n_sessions or int(rng.integers(1, 25))
+    sessions = [
+        rng.integers(0, alphabet, size=int(rng.integers(1, max_len + 1))).tolist()
+        for _ in range(n)
+    ]
+    return SequenceDatabase.from_sessions(sessions)
+
+
+def as_set(patterns):
+    return {(p.items, p.support) for p in patterns}
+
+
+GRID = [
+    # (minsup, min_len, max_len, maxgap)
+    (0.1, 2, 5, 1),
+    (0.3, 2, 4, 1),
+    (0.1, 2, 5, 2),
+    (0.25, 3, 6, 2),
+    (0.1, 2, 4, None),
+    (0.4, 2, 5, None),
+]
+
+
+@pytest.mark.parametrize("algo", ["spam", "prefixspan", "gsp"])
+@pytest.mark.parametrize("minsup,min_len,max_len,maxgap", GRID)
+@pytest.mark.parametrize("seed", range(6))
+def test_complete_miners_match_oracle(algo, minsup, min_len, max_len, maxgap, seed):
+    """Sound (every reported pattern has exact oracle support) and complete
+    (no frequent pattern missed)."""
+    db = random_db(seed)
+    params = MiningParams(minsup=minsup, min_len=min_len,
+                          max_len=max_len, maxgap=maxgap)
+    assert as_set(ALGORITHMS[algo](db, params)) == as_set(brute_force(db, params))
+
+
+@pytest.mark.parametrize("minsup,min_len,max_len,maxgap", GRID)
+@pytest.mark.parametrize("seed", range(6))
+def test_vmsp_equals_filtered_oracle(minsup, min_len, max_len, maxgap, seed):
+    db = random_db(seed)
+    params = MiningParams(minsup=minsup, min_len=min_len,
+                          max_len=max_len, maxgap=maxgap)
+    got = as_set(ALGORITHMS["vmsp"](db, params))
+    want = as_set(maximal_filter(brute_force(db, params), maxgap))
+    assert got == want
+
+
+def _contains(big: tuple, small: tuple, maxgap) -> bool:
+    if maxgap == 1:  # contiguous window
+        n = len(small)
+        return any(big[o:o + n] == small for o in range(len(big) - n + 1))
+    it = iter(big)
+    return all(x in it for x in small)
+
+
+@pytest.mark.parametrize("maxgap", [1, None])
+@pytest.mark.parametrize("seed", range(8))
+def test_maximal_filter_output_is_maximal(maxgap, seed):
+    """No surviving pattern is strictly included in another survivor, and
+    every dropped pattern is included in some survivor (nothing is lost)."""
+    db = random_db(seed)
+    params = MiningParams(minsup=0.15, min_len=2, max_len=5, maxgap=maxgap)
+    frequent = brute_force(db, params)
+    maximal = maximal_filter(frequent, maxgap)
+    kept = [p.items for p in maximal]
+    for a in kept:
+        for b in kept:
+            if a is not b and len(a) < len(b):
+                assert not _contains(b, a, maxgap)
+    kept_set = set(kept)
+    for p in frequent:
+        if p.items not in kept_set:
+            assert any(len(k) > len(p.items) and _contains(k, p.items, maxgap)
+                       for k in kept)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_minsup_monotonicity(seed):
+    """Raising minsup can only shrink the pattern set."""
+    db = random_db(seed)
+    prev = None
+    for minsup in (0.1, 0.3, 0.6):
+        params = MiningParams(minsup=minsup, min_len=2, max_len=4, maxgap=1)
+        cur = {p.items for p in ALGORITHMS["spam"](db, params)}
+        if prev is not None:
+            assert cur <= prev
+        prev = cur
+
+
+@pytest.mark.parametrize("algo", ["spam", "vmsp", "prefixspan", "gsp"])
+def test_planted_pattern_is_found(algo):
+    """A sequence planted in most sessions must surface with its support."""
+    planted = (7, 8, 9)
+    rng = np.random.default_rng(0)
+    sessions = []
+    for i in range(20):
+        noise = rng.integers(0, 5, size=3).tolist()
+        sessions.append(noise + list(planted) if i % 4 else noise)
+    db = SequenceDatabase.from_sessions(sessions)
+    enc = tuple(db.item_id(x) for x in planted)
+    params = MiningParams(minsup=0.5, min_len=3, max_len=6, maxgap=1)
+    found = {p.items: p.support for p in ALGORITHMS[algo](db, params)}
+    assert found.get(enc) == 15  # 20 sessions minus the 5 multiples of 4

@@ -1,0 +1,222 @@
+"""Invariant tests (deterministic randomized — no optional dependencies):
+two-space cache accounting, the §4.4 coherence path, and probabilistic-tree
+walk determinism.
+"""
+
+import random
+
+import pytest
+
+from repro.core import (
+    CacheStats,
+    PalpatineClient,
+    PalpatineConfig,
+    Pattern,
+    PTreeIndex,
+    SimulatedDKVStore,
+    TwoSpaceCache,
+)
+
+pytestmark = pytest.mark.tier1
+
+
+# ---------------------------------------------------------------------------
+# TwoSpaceCache
+# ---------------------------------------------------------------------------
+
+
+def check_cache_invariants(c: TwoSpaceCache, cache_bytes: int, frac: float):
+    # byte accounting never exceeds the configured budget, per space
+    assert c.main.used <= c.main.capacity <= cache_bytes
+    assert c.preemptive.used <= c.preemptive.capacity
+    # the preemptive/demand split is fixed at construction (§4.4)
+    assert c.preemptive.capacity == int(cache_bytes * frac)
+    # used bytes always equal the sum of resident entry sizes
+    assert c.main.used == sum(e.size for e in c.main.od.values())
+    assert c.preemptive.used == sum(e.size for e in c.preemptive.od.values())
+    # an item never lives in both spaces
+    assert not (set(c.main.od) & set(c.preemptive.od))
+
+
+@pytest.mark.parametrize("cache_bytes,frac", [(0, 0.5), (64, 0.1), (256, 0.5), (1024, 0.9)])
+@pytest.mark.parametrize("seed", range(5))
+def test_cache_accounting_under_random_ops(cache_bytes, frac, seed):
+    rng = random.Random(seed)
+    c = TwoSpaceCache(cache_bytes, frac)
+    for _ in range(600):
+        op = rng.choice(("demand", "prefetch", "lookup", "write", "invalidate"))
+        key = rng.randrange(40)
+        size = rng.choice((1, 7, 33, 120))
+        if op == "demand":
+            c.put_demand(key, b"x", size)
+        elif op == "prefetch":
+            c.put_prefetch(key, b"x", size, rng.random())
+        elif op == "lookup":
+            c.lookup(key, rng.random())
+        elif op == "write":
+            c.write(key, b"y", size)
+        else:
+            c.invalidate(key)
+        check_cache_invariants(c, cache_bytes, frac)
+    s = c.stats
+    assert s.hits + s.misses == s.accesses
+    assert s.prefetch_hits <= s.prefetches
+
+
+def test_oversized_item_is_rejected_not_overflowed():
+    c = TwoSpaceCache(100, 0.1)
+    c.put_demand(1, b"big", 101)
+    assert c.main.used == 0 and not c.contains(1)
+    c.put_prefetch(2, b"big", 11, 0.0)  # preemptive space is 10 bytes
+    assert c.preemptive.used == 0
+
+
+def test_prefetch_hit_promotes_and_counts_once():
+    c = TwoSpaceCache(1024, 0.5)
+    c.put_prefetch(5, b"v", 10, available_at=2.0)
+    v, wait = c.lookup(5, now=1.0)       # still in flight: caller waits
+    assert v == b"v" and wait == pytest.approx(1.0)
+    assert c.stats.prefetch_hits == 1 and c.stats.prefetch_waits == 1
+    assert 5 in c.main.od and 5 not in c.preemptive.od
+    c.lookup(5, now=3.0)                  # plain hit now, no second count
+    assert c.stats.prefetch_hits == 1 and c.stats.hits == 2
+
+
+# ---------------------------------------------------------------------------
+# Coherence (§4.4): external writes invalidate through the store monitor
+# ---------------------------------------------------------------------------
+
+
+def make_client(n_items=50):
+    store = SimulatedDKVStore()
+    store.load((("t", f"r{i}", "c"), b"old-%d" % i) for i in range(n_items))
+    return store, PalpatineClient(store, PalpatineConfig(prefetch_enabled=False))
+
+
+def test_external_write_invalidates_cached_entry():
+    store, client = make_client()
+    key = ("t", "r3", "c")
+    client.read(key)
+    iid = client.logger.db.item_id(key)
+    assert client.cache.contains(iid)
+    store.put(key, b"external", now=0.0)   # another writer, via the monitor
+    assert not client.cache.contains(iid)
+    assert client.cache.stats.invalidations == 1
+    assert client.read(key)[0] == b"external"
+
+
+def test_own_write_updates_in_place_without_invalidation():
+    store, client = make_client()
+    key = ("t", "r4", "c")
+    client.read(key)
+    client.write(key, b"mine")
+    iid = client.logger.db.item_id(key)
+    assert client.cache.contains(iid)      # write-through, not invalidated
+    assert client.cache.stats.invalidations == 0
+    assert client.read(key)[0] == b"mine"
+
+
+def test_external_write_to_uncached_key_is_noop():
+    store, client = make_client()
+    store.put(("t", "r9", "c"), b"x", now=0.0)
+    assert client.cache.stats.invalidations == 0
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_random_interleaved_writers_never_serve_stale(seed):
+    """After any interleaving of reads, own writes, and external writes,
+    a read always returns the store's current value."""
+    rng = random.Random(seed)
+    store, client = make_client(10)
+    external = 0
+    for step in range(400):
+        key = ("t", f"r{rng.randrange(10)}", "c")
+        op = rng.random()
+        if op < 0.5:
+            assert client.read(key)[0] == store.data[key]
+        elif op < 0.75:
+            client.write(key, b"own-%d" % step)
+        else:
+            store.put(key, b"ext-%d" % step, now=client.clock.now)
+            external += 1
+    assert external > 0
+
+
+# ---------------------------------------------------------------------------
+# PTreeIndex determinism
+# ---------------------------------------------------------------------------
+
+
+def random_patterns(seed, n=30):
+    rng = random.Random(seed)
+    return [
+        Pattern(tuple(rng.randrange(8) for _ in range(rng.randint(2, 6))),
+                rng.randint(1, 40))
+        for _ in range(n)
+    ]
+
+
+def tree_shape(idx: PTreeIndex) -> dict:
+    out = {}
+    for root, tree in idx.trees.items():
+        out[root] = [
+            (n.item, n.depth, round(n.prob, 12), round(n.cum_prob, 12))
+            for n in tree.root.level_order()
+        ]
+    return out
+
+
+def paths_with_probs(idx: PTreeIndex) -> dict:
+    """Iteration-order-independent view: root-path -> (prob, cum_prob)."""
+    out = {}
+    for root, tree in idx.trees.items():
+        stack = [(tree.root, (root,))]
+        while stack:
+            node, path = stack.pop()
+            out[path] = (round(node.prob, 12), round(node.cum_prob, 12))
+            for item, child in node.children.items():
+                stack.append((child, path + (item,)))
+    return out
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_ptree_build_is_deterministic(seed):
+    """Same pattern sequence -> byte-identical trees, probabilities, and
+    top-n selections (prefetch decisions are replayable)."""
+    pats = random_patterns(seed)
+    idx_a = PTreeIndex.build(pats)
+    idx_b = PTreeIndex.build(list(pats))
+    assert tree_shape(idx_a) == tree_shape(idx_b)
+    for root, tree in idx_a.trees.items():
+        top_a = [(n.item, n.depth) for n in tree.top_n_cumulative(4)]
+        top_b = [(n.item, n.depth) for n in idx_b.trees[root].top_n_cumulative(4)]
+        assert top_a == top_b
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_ptree_probabilities_independent_of_insertion_order(seed):
+    """Shuffling the mined pattern list must not change any node's place in
+    the tree or its probabilities — walks return the same estimates."""
+    pats = random_patterns(seed)
+    shuffled = list(pats)
+    random.Random(seed + 1).shuffle(shuffled)
+    idx_a, idx_b = PTreeIndex.build(pats), PTreeIndex.build(shuffled)
+    assert paths_with_probs(idx_a) == paths_with_probs(idx_b)
+    for p in pats:
+        node_a = idx_a.trees[p.items[0]].walk(p.items)
+        node_b = idx_b.trees[p.items[0]].walk(p.items)
+        assert node_a is not None and node_b is not None
+        assert node_a.cum_prob == node_b.cum_prob
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_ptree_walk_follows_inserted_paths_exactly(seed):
+    pats = random_patterns(seed)
+    idx = PTreeIndex.build(pats)
+    for p in pats:
+        node = idx.trees[p.items[0]].walk(p.items)
+        assert node is not None and node.depth == len(p.items) - 1
+        # walking one item off the end of an inserted path diverges unless
+        # another pattern extends it
+        ext = p.items + (99,)
+        assert idx.trees[p.items[0]].walk(ext) is None

@@ -14,6 +14,8 @@ from repro.core import (
 )
 from repro.core.mining import maximal_filter
 
+pytestmark = pytest.mark.tier1
+
 
 def make_db(seed=0, n_sessions=60, n_items=12, min_len=3, max_len=10,
             planted=((1, 2, 3, 4), (5, 6, 7))):

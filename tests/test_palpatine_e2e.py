@@ -12,6 +12,8 @@ from repro.core import (
     SimulatedDKVStore,
 )
 
+pytestmark = pytest.mark.tier1
+
 
 def build_store(n_items=500, value_size=100):
     store = SimulatedDKVStore()

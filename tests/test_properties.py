@@ -1,8 +1,18 @@
-"""Property-based tests (hypothesis) for the system's invariants."""
+"""Property-based tests for the system's invariants.
+
+Requires ``hypothesis`` — an *optional* dev dependency (not shipped in the
+runtime image).  The whole module skips cleanly when it is absent; the
+deterministic randomized equivalents live in test_differential.py and
+test_invariants.py and always run.
+"""
 
 import dataclasses
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency (pip install hypothesis)")
+
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

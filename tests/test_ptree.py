@@ -4,6 +4,8 @@ import pytest
 
 from repro.core import Pattern, PTreeIndex
 
+pytestmark = pytest.mark.tier1
+
 
 def fig3_patterns():
     """The paper's Figure 3 example: 8 sequences over roots {a,b,c}.

@@ -1,0 +1,55 @@
+"""Run the full test suite and enforce the not-to-exceed seed baseline.
+
+The seed repo ships with known failures in the accelerator-dependent
+modules (recorded below from the v0 seed run).  CI must never let a change
+*add* failures or *lose* passing tests, while tolerating the pre-existing
+red until those modules are repaired.
+
+Usage:  PYTHONPATH=src python tools/check_baseline.py [extra pytest args]
+"""
+
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+
+# v0 seed failure baseline, not-to-exceed (the pre-existing accelerator
+# red: ratchet DOWN as those modules are repaired)
+BASELINE_FAILED = 28
+BASELINE_ERRORS = 4
+# pass floor: seed had 105; PR 1 added the differential/invariant/cluster
+# suites.  Ratchet UP as suites grow, so green tests stay protected.
+# (tests/test_properties.py skips without hypothesis in both counts.)
+BASELINE_PASSED = 330
+
+
+def main() -> int:
+    cmd = [sys.executable, "-m", "pytest", "-q", "--tb=no", *sys.argv[1:]]
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    out = proc.stdout + proc.stderr
+    tail = out.strip().splitlines()[-1] if out.strip() else ""
+    print(out)
+
+    def count(kind: str) -> int:
+        m = re.search(rf"(\d+) {kind}", tail)
+        return int(m.group(1)) if m else 0
+
+    passed, failed, errors = count("passed"), count("failed"), count("error")
+    print(f"summary: {passed} passed / {failed} failed / {errors} errors "
+          f"(baseline {BASELINE_PASSED}/{BASELINE_FAILED}/{BASELINE_ERRORS})")
+    ok = True
+    if passed < BASELINE_PASSED:
+        print(f"REGRESSION: passed {passed} < baseline {BASELINE_PASSED}")
+        ok = False
+    if failed + errors > BASELINE_FAILED + BASELINE_ERRORS:
+        print(f"REGRESSION: failed+errors {failed + errors} > "
+              f"baseline {BASELINE_FAILED + BASELINE_ERRORS}")
+        ok = False
+    if ok:
+        print("baseline check OK")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
