@@ -6,6 +6,14 @@ tenant from the cluster's pooled mining.
 Rows:
   cluster_s{S}_c{M}_baseline  — M unmodified clients, S storage nodes
   cluster_s{S}_c{M}_palpatine — M Palpatine tenants + pattern exchange
+
+The degraded-node sweep makes one replica 10x slow and compares R=1
+against R>=2 with replica-aware routing (read-one-of-R + least-backlogged
+prefetch placement): replication keeps mean/p99 bounded while the
+unreplicated cluster collapses on every key homed on the slow node.
+
+  cluster_degraded_r{R}_{healthy,degraded} — per-replication-factor runs
+  cluster_degraded_r{R}_ratio              — degraded/healthy mean + p99
 """
 
 from __future__ import annotations
@@ -13,7 +21,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import ClusterBaseline, ClusterClient, ClusterConfig
-from repro.core import HeuristicConfig, MiningParams, PalpatineConfig
+from repro.core import HeuristicConfig, LatencyModel, MiningParams
+from repro.core import PalpatineConfig, ShardedDKVStore
 
 from .common import latency_stats, row
 from .workloads import TPCC, TPCCConfig
@@ -38,6 +47,59 @@ def palpatine_config(cache_bytes: int = 1 << 20) -> PalpatineConfig:
         dynamic_minsup_floor=0.002,
         column_mining=True,
     )
+
+
+def degraded_latencies(n_shards: int, slow_node: int = 0,
+                       factor: float = 10.0, jitter: float = 0.1):
+    """One node ``factor``x slow (a compacting / failing region server).
+    Degradation is never clean in production: the slow node also carries
+    heavy jitter and frequent long-tail stalls (GC pauses, compaction
+    storms), which is exactly the regime replica-aware routing hides."""
+    out = []
+    for i in range(n_shards):
+        slow = i == slow_node and factor > 1.0
+        mult = factor if slow else 1.0
+        out.append(LatencyModel(seed=1009 + i,
+                                jitter_sigma=0.4 if slow else jitter,
+                                stall_frac=0.05 if slow else 0.0,
+                                stall_mult=10.0,
+                                rtt=500e-6 * mult,
+                                per_item_service=150e-6 * mult))
+    return out
+
+
+def degraded_sweep(quick: bool = True):
+    """Mean/p99 latency with one 10x-slow replica, R=1 vs R>=2."""
+    n_shards, n_clients = 2, 4
+    n_tx = 60 if quick else 150
+    gen = TPCC(TPCCConfig())
+    # p99 over the pooled stage-2 latencies
+    for repl in (1, 2):
+        means, p99s = {}, {}
+        for label, degraded in (("healthy", False), ("degraded", True)):
+            lats_models = degraded_latencies(
+                n_shards, factor=10.0 if degraded else 1.0)
+            store = ShardedDKVStore(n_shards, latencies=lats_models,
+                                    replication=repl)
+            store.load(gen.dataset())
+            cluster = ClusterClient(store, ClusterConfig(
+                n_clients=n_clients, palpatine=palpatine_config()))
+            cluster.run(tenant_streams(gen, n_clients, n_tx, seed=11))
+            cluster.mine_all()
+            cluster.exchange_patterns()
+            cluster.reset_stats()
+            lats = [l for ls in cluster.run(
+                tenant_streams(gen, n_clients, n_tx, seed=13)) for l in ls]
+            ls_ = latency_stats(lats)
+            means[label] = ls_["mean_us"]
+            p99s[label] = float(np.percentile(np.asarray(lats), 99) * 1e6)
+            row(f"cluster_degraded_r{repl}_{label}", ls_["mean_us"],
+                p95_us=ls_["p95_us"], p99_us=p99s[label],
+                hit_rate=cluster.aggregate_stats().hit_rate)
+        row(f"cluster_degraded_r{repl}_ratio",
+            means["degraded"] / means["healthy"],
+            mean_ratio=means["degraded"] / means["healthy"],
+            p99_ratio=p99s["degraded"] / p99s["healthy"])
 
 
 def main(quick: bool = True):
@@ -77,6 +139,8 @@ def main(quick: bool = True):
                 speedup=bls["mean_us"] / ls_["mean_us"],
                 patterns=len(cluster.exchange.store),
                 col_patterns=len(cluster.exchange.col_store), **per_shard)
+
+    degraded_sweep(quick)
 
 
 if __name__ == "__main__":

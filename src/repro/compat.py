@@ -1,0 +1,36 @@
+"""Version shims for the jax APIs that moved between 0.4.x and 0.5+.
+
+Kept dependency-free and import-cheap: models, training, and launch all
+import from here, so this module must not touch device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "tpu_compiler_params"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the 0.4.x fallback.
+
+    On 0.4.x the function lives in ``jax.experimental.shard_map`` and the
+    "don't statically check replication" flag is ``check_rep`` rather than
+    ``check_vma``; semantics are identical for our uses.
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as fn04
+    return fn04(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_vma)
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` was named ``TPUCompilerParams`` on 0.4.x."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

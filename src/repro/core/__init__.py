@@ -6,7 +6,7 @@ and the two-space application-level cache — plus the simulated HBase-like
 back store used by the paper-fidelity benchmarks.
 """
 
-from .backstore import Clock, LatencyModel, SimulatedDKVStore
+from .backstore import Channel, Clock, LatencyModel, RPCFuture, SimulatedDKVStore
 from .cache import CacheStats, TwoSpaceCache
 from .cluster import (
     ClusterBaseline,
@@ -32,7 +32,8 @@ from .ptree import PTree, PTreeIndex
 from .sessions import AccessLogger, Container, SequenceDatabase
 
 __all__ = [
-    "AccessLogger", "ALGORITHMS", "BaselineClient", "CacheStats", "Clock",
+    "AccessLogger", "ALGORITHMS", "BaselineClient", "CacheStats", "Channel",
+    "Clock", "RPCFuture",
     "ClusterBaseline", "ClusterClient", "ClusterConfig", "Container",
     "HEURISTICS", "HeuristicConfig", "LatencyModel",
     "MiningParams", "Pattern", "PatternExchange", "PatternMetastore",

@@ -13,6 +13,14 @@ Prefetches run on a dedicated background channel (the paper's low-priority
 thread): they never serialize with demand fetches, but an item is only
 *available* in cache once its batch completes — a demand read arriving
 earlier blocks for the remainder (timeliness, §1).
+
+Demand reads are *futures-based*: ``get_async`` / ``multi_get_async`` issue
+the RPC on the node's demand channel (a fixed-width request pipeline, like
+a region server's RPC handler pool) and return an :class:`RPCFuture`
+carrying the issue time and the virtual completion time, so a client can
+keep several reads in flight across nodes and account completion with
+``max`` instead of ``sum`` — the read-path overlap that hides per-node
+tail latency.
 """
 
 from __future__ import annotations
@@ -22,7 +30,8 @@ from typing import Any, Callable, Iterable, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["Clock", "LatencyModel", "SimulatedDKVStore"]
+__all__ = ["Clock", "LatencyModel", "Channel", "RPCFuture",
+           "SimulatedDKVStore"]
 
 
 class Clock:
@@ -34,6 +43,79 @@ class Clock:
     def advance(self, dt: float) -> float:
         self.now += dt
         return self.now
+
+    def sync(self, t: float) -> float:
+        """Jump forward to at least ``t`` (never backwards).  A client
+        joining a running cluster must sync to the store's
+        :meth:`~SimulatedDKVStore.frontier` first: store channels are
+        shared, and reads issued from a lagging clock would be charged
+        for queueing behind their own future."""
+        self.now = max(self.now, float(t))
+        return self.now
+
+
+class Channel:
+    """Fixed-width FIFO request pipeline on the virtual clock.
+
+    ``width`` RPCs can be in service at once (a region server's handler
+    pool); further requests queue behind the earliest-free lane.  Width 1
+    recovers the strictly serial channel used for prefetch batches and the
+    write-behind WAL path.
+
+    Channels are shared store-side state: clients issuing against the same
+    node must keep their virtual clocks roughly synchronized (the cluster
+    drivers interleave tenants most-behind-first for exactly this reason).
+    A client reading at a ``now`` far behind the channel frontier would be
+    charged for queueing behind requests from its own future.
+    """
+
+    def __init__(self, width: int = 1):
+        self.lanes = [0.0] * max(1, int(width))
+
+    @property
+    def free_at(self) -> float:
+        """When the earliest lane frees up (single-lane: the channel)."""
+        return min(self.lanes)
+
+    @free_at.setter
+    def free_at(self, t: float) -> None:
+        self.lanes = [float(t)] * len(self.lanes)
+
+    def backlog(self, now: float) -> float:
+        """Wait before a new request would enter service."""
+        return max(0.0, self.free_at - now)
+
+    def issue(self, now: float, service: float) -> float:
+        """Enqueue one RPC at virtual time ``now``; returns completion."""
+        i = min(range(len(self.lanes)), key=self.lanes.__getitem__)
+        done = max(now, self.lanes[i]) + service
+        self.lanes[i] = done
+        return done
+
+
+@dataclasses.dataclass
+class RPCFuture:
+    """A demand read in flight: resolved values plus completion times on
+    the virtual clock.  The store resolves values eagerly (the simulation
+    knows them); *time* is what stays outstanding."""
+
+    keys: tuple
+    values: list
+    issue_time: float
+    done_at: float                       # when the whole RPC lands
+    done_each: list = dataclasses.field(default_factory=list)  # per key
+    node: Optional[int] = None           # serving node (sharded stores)
+
+    def result(self) -> tuple[list, float]:
+        return self.values, self.done_at
+
+    def value(self):
+        """Single-key convenience."""
+        return self.values[0]
+
+    def wait(self, now: float) -> float:
+        """Remaining in-flight time as seen from ``now``."""
+        return max(0.0, self.done_at - now)
 
 
 @dataclasses.dataclass
@@ -74,14 +156,40 @@ class LatencyModel:
 class SimulatedDKVStore:
     """Wide-columnar KV store: keys are container keys, values are bytes."""
 
-    def __init__(self, latency: Optional[LatencyModel] = None):
+    #: demand RPC handler pool per node — concurrent clients' in-flight
+    #: reads pipeline through these lanes instead of magically overlapping
+    DEMAND_WIDTH = 4
+
+    def __init__(self, latency: Optional[LatencyModel] = None,
+                 demand_width: int = DEMAND_WIDTH):
         self.latency = latency or LatencyModel()
         self.data: dict[Any, bytes] = {}
-        self.background_free_at = 0.0  # prefetch channel availability
-        self.write_free_at = 0.0       # write-behind channel (WAL path)
+        self.demand = Channel(demand_width)     # foreground RPC pipeline
+        self.background = Channel(1)   # prefetch channel
+        self.write_channel = Channel(1)  # write-behind channel (WAL path)
         self.gets = 0
         self.bytes_served = 0
+        #: EWMA of per-item demand service time — the "how fast is this
+        #: node lately" signal replica-aware routing steers by
+        self.ewma_service: Optional[float] = None
         self._watchers: list[Callable[[Any], None]] = []
+
+    # channel aliases (pre-futures API surface, kept for tests/tools)
+    @property
+    def background_free_at(self) -> float:
+        return self.background.free_at
+
+    @background_free_at.setter
+    def background_free_at(self, t: float) -> None:
+        self.background.free_at = t
+
+    @property
+    def write_free_at(self) -> float:
+        return self.write_channel.free_at
+
+    @write_free_at.setter
+    def write_free_at(self, t: float) -> None:
+        self.write_channel.free_at = t
 
     # -- population ------------------------------------------------------
     def load(self, items: Iterable[tuple]) -> None:
@@ -89,20 +197,57 @@ class SimulatedDKVStore:
             self.data[k] = v
 
     # -- foreground (demand) path ----------------------------------------
-    def get(self, key) -> tuple[Any, float]:
-        """Returns (value, latency)."""
-        v = self.data.get(key)
-        size = len(v) if v is not None else 0
-        self.gets += 1
-        self.bytes_served += size
-        return v, self.latency.get(1, size)
+    def _note_service(self, latency: float, n_items: int) -> None:
+        per_item = latency / max(1, n_items)
+        if self.ewma_service is None:
+            self.ewma_service = per_item
+        else:
+            self.ewma_service = 0.8 * self.ewma_service + 0.2 * per_item
 
-    def multi_get(self, keys: Sequence) -> tuple[list, float]:
+    def _serve(self, keys: Sequence) -> tuple[list, float]:
+        """Look up + sample latency; no EWMA update (shared by the demand
+        and background paths — only demand service feeds routing)."""
         vals = [self.data.get(k) for k in keys]
         total = sum(len(v) for v in vals if v is not None)
         self.gets += len(keys)
         self.bytes_served += total
         return vals, self.latency.get(len(keys), total)
+
+    def get(self, key) -> tuple[Any, float]:
+        """Returns (value, latency)."""
+        vals, lat = self._serve((key,))
+        self._note_service(lat, 1)
+        return vals[0], lat
+
+    def multi_get(self, keys: Sequence) -> tuple[list, float]:
+        vals, lat = self._serve(keys)
+        self._note_service(lat, len(keys))
+        return vals, lat
+
+    def get_async(self, key, now: float) -> RPCFuture:
+        """Issue a demand read on the node's RPC pipeline; never blocks.
+        The future's ``done_at`` accounts queueing behind other in-flight
+        demand reads (handler-pool contention)."""
+        v, lat = self.get(key)
+        done = self.demand.issue(now, lat)
+        return RPCFuture((key,), [v], now, done, done_each=[done])
+
+    def multi_get_async(self, keys: Sequence, now: float) -> RPCFuture:
+        """Batched demand read as one pipelined RPC."""
+        vals, lat = self.multi_get(keys)
+        done = self.demand.issue(now, lat)
+        return RPCFuture(tuple(keys), vals, now, done,
+                         done_each=[done] * len(keys))
+
+    def demand_backlog(self, now: float) -> float:
+        """Queueing delay a new demand read would see right now."""
+        return self.demand.backlog(now)
+
+    def frontier(self) -> float:
+        """The furthest virtual time any channel has been driven to — the
+        join point for a new client's clock (see :meth:`Clock.sync`)."""
+        return max(max(self.demand.lanes), max(self.background.lanes),
+                   max(self.write_channel.lanes))
 
     def contains(self, key) -> bool:
         """Membership probe on store metadata (no data transfer, no latency
@@ -112,15 +257,15 @@ class SimulatedDKVStore:
     # -- background channel (prefetch batches, async writes) --------------
     def backlog(self, now: float) -> float:
         """Outstanding work queued on the background channel, in seconds."""
-        return max(0.0, self.background_free_at - now)
+        return self.background.backlog(now)
 
     def background_get(self, keys: Sequence, now: float) -> tuple[list, float]:
         """Issue a batched get on the background channel at virtual time
-        ``now``; returns (values, completion_time)."""
-        vals, lat = self.multi_get(keys)
-        start = max(self.background_free_at, now)
-        self.background_free_at = start + lat
-        return vals, self.background_free_at
+        ``now``; returns (values, completion_time).  Does not touch the
+        demand-service EWMA: amortized batch service would make prefetch-
+        heavy nodes look faster to demand routing than they are."""
+        vals, lat = self._serve(keys)
+        return vals, self.background.issue(now, lat)
 
     def background_multi_get(
         self, keys: Sequence, now: float, backlog_cap: Optional[float] = None
@@ -141,11 +286,10 @@ class SimulatedDKVStore:
         the caller does not block."""
         self.data[key] = value
         lat = self.latency.put(1, len(value))
-        start = max(self.write_free_at, now)
-        self.write_free_at = start + lat
+        done = self.write_channel.issue(now, lat)
         for w in self._watchers:
             w(key)
-        return self.write_free_at
+        return done
 
     # -- coherence monitor (co-processor / trigger stand-in, §4.4) --------
     def watch(self, callback: Callable[[Any], None]) -> None:

@@ -34,7 +34,7 @@ import hashlib
 import heapq
 from typing import Callable, Iterable, Optional, Sequence
 
-from .backstore import LatencyModel, SimulatedDKVStore
+from .backstore import LatencyModel, RPCFuture, SimulatedDKVStore
 from .cache import CacheStats, TwoSpaceCache
 from .metastore import PatternMetastore
 from .mining import Pattern
@@ -74,23 +74,39 @@ def sum_stats(stats: Iterable[CacheStats]) -> CacheStats:
 
 
 class ShardedDKVStore:
-    """N simulated storage nodes behind a consistent-hash ring.
+    """N simulated storage nodes behind a consistent-hash ring, with R-way
+    replication (each key lives on the R distinct ring successors of its
+    point — primary first, like Dynamo/Cassandra preference lists).
 
     Exposes the same client-facing surface as ``SimulatedDKVStore`` (get /
     multi_get / put / load / contains / watch / backlog /
-    background_multi_get) so ``PalpatineClient`` and ``BaselineClient`` run
-    against it unchanged.
+    background_multi_get, plus the futures API get_async / multi_get_async)
+    so ``PalpatineClient`` and ``BaselineClient`` run against it unchanged.
+
+    Read semantics are read-one-of-R by default: each demand read routes to
+    the replica with the lowest estimated completion time (demand-channel
+    backlog + EWMA service), so one degraded node only slows the keys that
+    have no other live replica.  ``read_quorum`` > 1 issues to every live
+    replica and completes at the q-th fastest.  Writes are write-all: every
+    live replica applies the write on its own write-behind channel and the
+    logical write completes when the slowest replica acks.
     """
 
     def __init__(self, n_shards: int = 4,
                  latencies: Optional[Sequence[LatencyModel]] = None,
-                 vnodes: int = 64):
+                 vnodes: int = 64, replication: int = 1,
+                 read_quorum: int = 1):
         if latencies is None:
             latencies = [LatencyModel(seed=1009 + i) for i in range(n_shards)]
         if len(latencies) != n_shards:
             raise ValueError("need one LatencyModel per shard")
         self.n_shards = int(n_shards)
+        self.replication = max(1, min(int(replication), self.n_shards))
+        if not 1 <= int(read_quorum) <= self.replication:
+            raise ValueError("read_quorum must be in [1, replication]")
+        self.read_quorum = int(read_quorum)
         self.shards = [SimulatedDKVStore(l) for l in latencies]
+        self.down: set[int] = set()
         ring = []
         for s in range(self.n_shards):
             for v in range(vnodes):
@@ -98,30 +114,138 @@ class ShardedDKVStore:
         ring.sort()
         self._points = [p for p, _ in ring]
         self._owners = [s for _, s in ring]
+        self._replica_cache: dict = {}
 
     # -- placement ---------------------------------------------------------
     def shard_of(self, key) -> int:
-        """Owning node: first virtual node clockwise from the key's point."""
-        i = bisect.bisect_right(self._points, _hash64(key)) % len(self._points)
-        return self._owners[i]
+        """Primary node: first virtual node clockwise from the key's point."""
+        return self.replicas_of(key)[0]
 
-    def _group(self, keys: Sequence) -> dict[int, list[int]]:
+    def replicas_of(self, key) -> tuple[int, ...]:
+        """The key's preference list: R distinct nodes walking the ring
+        clockwise from its point (primary first)."""
+        h = _hash64(key)
+        cached = self._replica_cache.get(h)
+        if cached is not None:
+            return cached
+        i = bisect.bisect_right(self._points, h) % len(self._points)
+        owners: list[int] = []
+        for step in range(len(self._owners)):
+            s = self._owners[(i + step) % len(self._owners)]
+            if s not in owners:
+                owners.append(s)
+                if len(owners) == self.replication:
+                    break
+        reps = tuple(owners)
+        self._replica_cache[h] = reps
+        return reps
+
+    def set_down(self, shard: int, down: bool = True) -> None:
+        """Mark a node failed/recovered.  Reads route around down replicas;
+        writes skip them (re-sync on recovery is out of scope here)."""
+        if down:
+            self.down.add(shard)
+        else:
+            self.down.discard(shard)
+
+    def _live_replicas(self, key) -> list[int]:
+        reps = [s for s in self.replicas_of(key) if s not in self.down]
+        if not reps:
+            raise KeyError(f"all replicas of {key!r} are down")
+        return reps
+
+    def _route(self, key, now: float) -> int:
+        """Read-one-of-R: the live replica with the lowest estimated
+        completion time — demand-channel queueing delay plus the node's
+        EWMA per-item service (how slow it has been lately)."""
+        reps = self._live_replicas(key)
+        if len(reps) == 1:
+            return reps[0]
+        return min(reps, key=lambda s: (
+            self.shards[s].demand_backlog(now)
+            + (self.shards[s].ewma_service or 0.0)))
+
+    def _group(self, keys: Sequence, now: float = 0.0) -> dict[int, list[int]]:
+        """Demand scatter plan: positions per chosen serving node.
+
+        Planning is load-aware: items already assigned to a node during
+        this plan count as pending service, so a replicated batch spreads
+        across its replicas instead of herding onto whichever node looked
+        (marginally) fastest at plan time — a slow replica still receives
+        work in inverse proportion to its service estimate."""
         by_shard: dict[int, list[int]] = {}
+        pending: dict[int, int] = {}
         for pos, k in enumerate(keys):
-            by_shard.setdefault(self.shard_of(k), []).append(pos)
+            reps = self._live_replicas(k)
+            if len(reps) == 1:
+                s = reps[0]
+            else:
+                s = min(reps, key=lambda r: (
+                    self.shards[r].demand_backlog(now)
+                    + (self.shards[r].ewma_service or 1e-6)
+                    * (1 + pending.get(r, 0))))
+            by_shard.setdefault(s, []).append(pos)
+            pending[s] = pending.get(s, 0) + 1
         return by_shard
 
     # -- population --------------------------------------------------------
     def load(self, items: Iterable[tuple]) -> None:
         for k, v in items:
-            self.shards[self.shard_of(k)].data[k] = v
+            for s in self.replicas_of(k):
+                self.shards[s].data[k] = v
 
     def contains(self, key) -> bool:
-        return self.shards[self.shard_of(key)].contains(key)
+        return any(self.shards[s].contains(key)
+                   for s in self.replicas_of(key) if s not in self.down)
 
     # -- foreground (demand) path ------------------------------------------
     def get(self, key) -> tuple:
-        return self.shards[self.shard_of(key)].get(key)
+        return self.shards[self._route(key, 0.0)].get(key)
+
+    def get_async(self, key, now: float) -> RPCFuture:
+        """Futures-based demand read with replica-aware routing.  With a
+        read quorum, issue to every live replica and complete at the q-th
+        fastest ack (read amplification buys tail-latency insurance)."""
+        if self.read_quorum <= 1:
+            node = self._route(key, now)
+            fut = self.shards[node].get_async(key, now)
+            fut.node = node
+            return fut
+        reps = self._live_replicas(key)
+        futs = [self.shards[s].get_async(key, now) for s in reps]
+        q = min(self.read_quorum, len(futs))
+        done = sorted(f.done_at for f in futs)[q - 1]
+        fastest = min(range(len(futs)), key=lambda i: futs[i].done_at)
+        return RPCFuture((key,), futs[fastest].values, now, done,
+                         done_each=[done], node=reps[fastest])
+
+    def multi_get_async(self, keys: Sequence, now: float) -> RPCFuture:
+        """Scatter-gather demand read: one pipelined sub-batch RPC per
+        serving node, all in flight concurrently.  Read-one: each key joins
+        its routed replica's sub-batch.  Read-quorum: each key joins every
+        live replica's sub-batch and completes at the q-th fastest of its
+        replicas' batches.  The future's ``done_at`` is the slowest
+        per-key completion."""
+        vals: list = [None] * len(keys)
+        if self.read_quorum <= 1:
+            plan = self._group(keys, now)
+        else:
+            plan = {}
+            for pos, k in enumerate(keys):
+                for s in self._live_replicas(k):
+                    plan.setdefault(s, []).append(pos)
+        done_lists: list[list[float]] = [[] for _ in keys]
+        for shard, positions in plan.items():
+            fut = self.shards[shard].multi_get_async(
+                [keys[p] for p in positions], now)
+            for p, v in zip(positions, fut.values):
+                vals[p] = v
+                done_lists[p].append(fut.done_at)
+        q = self.read_quorum
+        done_each = [sorted(ds)[min(q, len(ds)) - 1] if ds else now
+                     for ds in done_lists]
+        worst = max(done_each, default=now)
+        return RPCFuture(tuple(keys), vals, now, worst, done_each=done_each)
 
     def multi_get(self, keys: Sequence) -> tuple[list, float]:
         """Scatter-gather: per-node sub-batches run in parallel; the caller
@@ -137,21 +261,36 @@ class ShardedDKVStore:
 
     # -- background channels -----------------------------------------------
     def backlog(self, now: float) -> float:
-        """Least-loaded node's backlog: prefetching is only fully shed when
-        *every* node's background channel is saturated (per-node shedding
-        happens inside :meth:`background_multi_get`)."""
-        return min(s.backlog(now) for s in self.shards)
+        """Least-loaded live node's backlog: prefetching is only fully shed
+        when *every* node's background channel is saturated (per-node
+        shedding happens inside :meth:`background_multi_get`)."""
+        return min(s.backlog(now) for i, s in enumerate(self.shards)
+                   if i not in self.down)
 
     def background_multi_get(
         self, keys: Sequence, now: float, backlog_cap: Optional[float] = None
     ) -> tuple[list, list]:
-        """Split the batch per owning node; each node serves its sub-batch
-        on its own background channel (concurrently across nodes), so every
-        key completes when *its* node's batch lands.  Nodes backlogged past
+        """Split the batch per least-backlogged replica (load-aware, like
+        :meth:`_group`); each node serves its sub-batch on its own
+        background channel (concurrently across nodes), so every key
+        completes when *its* node's batch lands.  Nodes backlogged past
         ``backlog_cap`` shed their sub-batch only."""
         vals: list = [None] * len(keys)
         done: list = [now] * len(keys)
-        for shard, positions in self._group(keys).items():
+        by_shard: dict[int, list[int]] = {}
+        pending: dict[int, int] = {}
+        for pos, k in enumerate(keys):
+            reps = self._live_replicas(k)
+            if len(reps) == 1:
+                s = reps[0]
+            else:
+                s = min(reps, key=lambda r: (
+                    self.shards[r].backlog(now)
+                    + (self.shards[r].ewma_service or 1e-6)
+                    * (1 + pending.get(r, 0))))
+            by_shard.setdefault(s, []).append(pos)
+            pending[s] = pending.get(s, 0) + 1
+        for shard, positions in by_shard.items():
             node = self.shards[shard]
             if backlog_cap is not None and node.backlog(now) > backlog_cap:
                 continue
@@ -162,7 +301,12 @@ class ShardedDKVStore:
         return vals, done
 
     def put(self, key, value: bytes, now: float) -> float:
-        return self.shards[self.shard_of(key)].put(key, value, now)
+        """Write-all: every live replica applies the write on its own
+        write-behind channel; the logical write completes when the slowest
+        replica acks (keeps replicas coherent, including their write
+        monitors, at the cost of write-tail exposure)."""
+        return max(self.shards[s].put(key, value, now)
+                   for s in self._live_replicas(key))
 
     # -- coherence ---------------------------------------------------------
     def watch(self, callback: Callable) -> None:
@@ -170,6 +314,11 @@ class ShardedDKVStore:
         writes from all of them."""
         for s in self.shards:
             s.watch(callback)
+
+    def frontier(self) -> float:
+        """Furthest virtual time any node's channels reached — where a
+        late-joining client's clock must sync to (:meth:`Clock.sync`)."""
+        return max(s.frontier() for s in self.shards)
 
     # -- aggregate telemetry ----------------------------------------------
     @property
@@ -326,12 +475,16 @@ class PatternExchange:
 
 
 def _apply_op(client, op):
-    """One workload op: a bare key (read), ('r', key), or ('w', key[, value]).
-    Returns (kind, latency, value)."""
-    if isinstance(op, tuple) and len(op) >= 2 and op[0] in ("r", "w"):
+    """One workload op: a bare key (read), ('r', key), ('w', key[, value]),
+    or ('mr', [keys]) — a batched read issued as overlapping in-flight
+    demand fetches.  Returns (kind, latency, value)."""
+    if isinstance(op, tuple) and len(op) >= 2 and op[0] in ("r", "w", "mr"):
         if op[0] == "w":
             value = op[2] if len(op) > 2 else b"x" * 64
             return "w", client.write(op[1], value), None
+        if op[0] == "mr":
+            values, lat = client.read_many(op[1])
+            return "r", lat, values
         value, lat = client.read(op[1])
         return "r", lat, value
     value, lat = client.read(op)

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 from .backstore import Clock, SimulatedDKVStore
 from .cache import TwoSpaceCache
@@ -92,6 +92,16 @@ class PalpatineClient:
     # ------------------------------------------------------------------
     # Client API (mirrors the store's get/put — transparent, §4.5)
     # ------------------------------------------------------------------
+    def _demand_fetch(self, key, now: float):
+        """One demand read as a future: (value, completion_time).  Stores
+        without the futures API fall back to the blocking get."""
+        get_async = getattr(self.store, "get_async", None)
+        if get_async is None:
+            value, lat = self.store.get(key)
+            return value, now + lat
+        fut = get_async(key, now)
+        return fut.value(), fut.done_at
+
     def read(self, container) -> tuple[Any, float]:
         """Returns (value, virtual latency).  Advances the virtual clock."""
         now = self.clock.now
@@ -108,8 +118,8 @@ class PalpatineClient:
             # miss, or the prefetch is too far in flight: demand-fetch wins
             # the race (timeliness failure, counted against precision by
             # the still-pending preemptive entry)
-            value, latency = self.store.get(self._store_key(container))
-            latency += CACHE_OVERHEAD
+            value, done_at = self._demand_fetch(self._store_key(container), now)
+            latency = (done_at - now) + CACHE_OVERHEAD
             if value is not None:
                 self.cache.put_demand(iid, value, len(value))
 
@@ -120,6 +130,61 @@ class PalpatineClient:
         self._maybe_online_mine()
         self.clock.advance(latency)
         return value, latency
+
+    def read_many(self, containers: Sequence) -> tuple[list, float]:
+        """Batched read with overlapping in-flight demand fetches.
+
+        All containers are logged in order (one monitoring event each, so
+        mining sees the same sequence a loop of ``read`` would produce);
+        cache hits are served locally and every miss joins one scatter-
+        gather ``multi_get_async`` whose sub-batches pipeline concurrently
+        across shards — the batch completes when the slowest node (or the
+        longest still-in-flight prefetch) lands, not at the sum of
+        per-key round trips.  Returns (values, batch latency)."""
+        now = self.clock.now
+        self.logger.record_many(now, containers)
+        if self.cfg.column_mining:
+            self.col_logger.record_many(
+                now, [self._generalize(c) for c in containers])
+        values: list = [None] * len(containers)
+        iids: list[int] = []
+        misses: list[tuple[int, int, Any]] = []   # (position, iid, key)
+        worst_wait = 0.0
+        for pos, container in enumerate(containers):
+            iid = self.logger.db.item_id(container)
+            iids.append(iid)
+            hit = self.cache.lookup(iid, now)
+            if hit is not None and hit[1] <= self.cfg.prefetch_wait_cap:
+                values[pos] = hit[0]
+                worst_wait = max(worst_wait, hit[1])
+            else:
+                misses.append((pos, iid, self._store_key(container)))
+
+        done_at = now + worst_wait
+        if misses:
+            keys = [k for _, _, k in misses]
+            multi_async = getattr(self.store, "multi_get_async", None)
+            if multi_async is None:
+                vals, lat = self.store.multi_get(keys)
+                batch_done = now + lat
+            else:
+                fut = multi_async(keys, now)
+                vals, batch_done = fut.result()
+            for (pos, iid, _), v in zip(misses, vals):
+                values[pos] = v
+                if v is not None:
+                    self.cache.put_demand(iid, v, len(v))
+            done_at = max(done_at, batch_done)
+
+        latency = (done_at - now) + CACHE_OVERHEAD * len(containers)
+        if self.cfg.prefetch_enabled:
+            for iid, container in zip(iids, containers):
+                self._prefetch(iid, now)
+                if self.cfg.column_mining:
+                    self._prefetch_columns(container, now)
+        self._maybe_online_mine()
+        self.clock.advance(latency)
+        return values, latency
 
     def write(self, container, value: bytes) -> float:
         """Write-through cache update + async store write (§4.4); returns
@@ -289,7 +354,9 @@ class PalpatineClient:
 
 
 class BaselineClient:
-    """The unmodified DKV client: every read is a store round trip."""
+    """The unmodified DKV client: every read is a store round trip (issued
+    through the same futures RPC layer, so baseline and Palpatine see
+    identical channel contention)."""
 
     def __init__(self, store: SimulatedDKVStore, clock: Optional[Clock] = None):
         self.store = store
@@ -297,9 +364,30 @@ class BaselineClient:
 
     def read(self, container) -> tuple[Any, float]:
         key = container.key() if hasattr(container, "key") else container
-        value, latency = self.store.get(key)
+        now = self.clock.now
+        get_async = getattr(self.store, "get_async", None)
+        if get_async is None:
+            value, latency = self.store.get(key)
+        else:
+            fut = get_async(key, now)
+            value, latency = fut.value(), fut.done_at - now
         self.clock.advance(latency)
         return value, latency
+
+    def read_many(self, containers: Sequence) -> tuple[list, float]:
+        """Scatter-gather demand read: sub-batches overlap across shards,
+        the batch completes when the slowest node lands."""
+        keys = [c.key() if hasattr(c, "key") else c for c in containers]
+        now = self.clock.now
+        multi_async = getattr(self.store, "multi_get_async", None)
+        if multi_async is None:
+            values, latency = self.store.multi_get(keys)
+        else:
+            fut = multi_async(keys, now)
+            values, done_at = fut.result()
+            latency = done_at - now
+        self.clock.advance(latency)
+        return values, latency
 
     def write(self, container, value: bytes) -> float:
         key = container.key() if hasattr(container, "key") else container

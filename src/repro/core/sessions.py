@@ -141,6 +141,14 @@ class AccessLogger:
         self._last_t = t
         self.n_events += 1
 
+    def record_many(self, t: float, containers: Iterable) -> None:
+        """Log a batch issued as overlapping in-flight reads: one burst at
+        a single virtual timestamp.  The batch order is preserved in the
+        session (mining sees the same sequence a loop of ``record`` calls
+        would produce), and a batch never straddles a session cut."""
+        for c in containers:
+            self.record(t, c)
+
     def flush_session(self) -> None:
         if self._open:
             self.db.add_session(self._open)

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 __all__ = ["sstep_join_support_pallas"]
 
 DEFAULT_BLOCK_K = 8
@@ -88,7 +90,7 @@ def sstep_join_support_pallas(
             jax.ShapeDtypeStruct((k_items, n_sessions, n_words), jnp.uint32),
             jax.ShapeDtypeStruct((k_items, 1), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -1,11 +1,13 @@
 """End-to-end tests for the sharded multi-node cluster: shard-count
-transparency, pattern-exchange benefit, tenant isolation, and cross-tenant
-coherence."""
+transparency, pattern-exchange benefit, tenant isolation, cross-tenant
+coherence, and R-way replication (read-one-of-R routing, write-all
+coherence, node-down availability, degraded-node tail behavior)."""
 
 import numpy as np
 import pytest
 
 from repro.core import (
+    BaselineClient,
     ClusterBaseline,
     ClusterClient,
     ClusterConfig,
@@ -32,14 +34,19 @@ def value_of(key) -> bytes:
     return ("val:" + "/".join(map(str, key))).encode().ljust(VALUE_PAD, b".")
 
 
-def make_store(n_shards, deterministic=True):
+def make_store(n_shards, deterministic=True, **kw):
     store = ShardedDKVStore(
         n_shards,
         latencies=[flat_latency(i) for i in range(n_shards)] if deterministic else None,
+        **kw,
     )
     store.load(((("t", f"r{i}", "c"), value_of(("t", f"r{i}", "c")))
                 for i in range(N_KEYS)))
     return store
+
+
+def all_keys():
+    return [("t", f"r{i}", "c") for i in range(N_KEYS)]
 
 
 PLANTED = tuple(
@@ -117,6 +124,269 @@ def test_background_multi_get_sheds_per_shard_only():
     assert vals[0] is None            # shed: shard 0 over the cap
     assert vals[1] is not None        # shard 1 still serves
     assert done[1] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Replication: placement, availability, write-all coherence, routing
+# ---------------------------------------------------------------------------
+
+
+def test_replicas_are_distinct_and_loaded_everywhere():
+    store = make_store(4, replication=3)
+    for k in all_keys():
+        reps = store.replicas_of(k)
+        assert len(reps) == 3 and len(set(reps)) == 3
+        assert reps[0] == store.shard_of(k)
+        for s in reps:
+            assert store.shards[s].data[k] == value_of(k)
+        for s in set(range(4)) - set(reps):
+            assert k not in store.shards[s].data
+
+
+def test_replication_capped_at_cluster_size_and_quorum_validated():
+    assert ShardedDKVStore(2, replication=5).replication == 2
+    with pytest.raises(ValueError):
+        ShardedDKVStore(4, replication=2, read_quorum=3)
+
+
+def test_every_key_readable_with_any_single_node_down():
+    store = make_store(4, replication=2)
+    for down in range(4):
+        store.set_down(down)
+        for k in all_keys():
+            assert store.contains(k)
+            v, _ = store.get(k)
+            assert v == value_of(k)
+            fut = store.get_async(k, now=0.0)
+            assert fut.value() == value_of(k)
+            assert fut.node != down
+        store.set_down(down, False)
+
+
+def test_unreplicated_key_with_owner_down_raises():
+    store = make_store(2, replication=1)
+    key = all_keys()[0]
+    store.set_down(store.shard_of(key))
+    with pytest.raises(KeyError):
+        store.get(key)
+
+
+def test_write_all_keeps_replicas_coherent():
+    store = make_store(4, replication=3)
+    key = ("t", "r11", "c")
+    done = store.put(key, b"new-value", now=0.0)
+    assert done > 0.0
+    for s in store.replicas_of(key):
+        assert store.shards[s].data[key] == b"new-value"
+    # any single node down, the write is still visible
+    for down in store.replicas_of(key):
+        store.set_down(down)
+        assert store.get(key)[0] == b"new-value"
+        store.set_down(down, False)
+
+
+def test_write_monitor_invalidates_under_replication():
+    """Write-all fires each replica's write monitor; a reader tenant's
+    cached copy is invalidated exactly as with R=1, and a re-read through
+    any replica returns the new value."""
+    store = make_store(4, replication=2)
+    cluster = ClusterClient(store, ClusterConfig(
+        n_clients=2, palpatine=small_palpatine()))
+    a, b = cluster.tenants
+    key = ("t", "r5", "c")
+    b.read(key)
+    iid = b.logger.db.item_id(key)
+    assert b.cache.contains(iid)
+    a.write(key, b"from-a")
+    assert not b.cache.contains(iid)
+    assert b.read(key)[0] == b"from-a"
+    assert a.read(key)[0] == b"from-a"
+
+
+def test_demand_routing_learns_to_avoid_slow_replica():
+    slow = [LatencyModel(jitter_sigma=0.0, stall_frac=0.0, seed=0,
+                         rtt=5e-3, per_item_service=1.5e-3)]
+    fast = [flat_latency(i) for i in range(1, 4)]
+    store = ShardedDKVStore(4, latencies=slow + fast, replication=2)
+    store.load((k, value_of(k)) for k in all_keys())
+    # warm the EWMA service estimates, then measure routing
+    for k in all_keys():
+        store.get_async(k, now=0.0)
+    routed_slow = sum(
+        1 for k in all_keys()
+        if 0 in store.replicas_of(k) and store.get_async(k, 1e9).node == 0)
+    protected = sum(1 for k in all_keys() if 0 in store.replicas_of(k))
+    assert protected > 0
+    assert routed_slow < 0.1 * protected
+
+
+def test_read_quorum_completes_at_qth_fastest():
+    lat_fast = LatencyModel(jitter_sigma=0.0, stall_frac=0.0, rtt=500e-6)
+    lat_slow = LatencyModel(jitter_sigma=0.0, stall_frac=0.0, rtt=5e-3)
+    one = ShardedDKVStore(2, latencies=[lat_fast, lat_slow],
+                          replication=2, read_quorum=1)
+    quorum = ShardedDKVStore(
+        2,
+        latencies=[LatencyModel(jitter_sigma=0.0, stall_frac=0.0, rtt=500e-6),
+                   LatencyModel(jitter_sigma=0.0, stall_frac=0.0, rtt=5e-3)],
+        replication=2, read_quorum=2)
+    key = all_keys()[0]
+    for s in (one, quorum):
+        s.load([(key, value_of(key))])
+    f1 = one.get_async(key, now=0.0)
+    f2 = quorum.get_async(key, now=0.0)
+    assert f1.value() == f2.value() == value_of(key)
+    # quorum read waits for the slower of the two replicas
+    assert f2.done_at > f1.done_at
+    assert f2.done_at >= 5e-3
+
+
+def test_read_quorum_applies_to_batched_reads():
+    """multi_get_async must honor the quorum: every key's completion is
+    the q-th fastest of its replicas' sub-batches, not the routed one."""
+    lat = [LatencyModel(jitter_sigma=0.0, stall_frac=0.0, rtt=500e-6),
+           LatencyModel(jitter_sigma=0.0, stall_frac=0.0, rtt=5e-3)]
+    quorum = ShardedDKVStore(2, latencies=lat, replication=2, read_quorum=2)
+    keys = all_keys()[:8]
+    quorum.load((k, value_of(k)) for k in keys)
+    fut = quorum.multi_get_async(keys, now=0.0)
+    assert fut.values == [value_of(k) for k in keys]
+    # every key waited for the slow replica's sub-batch too
+    assert all(d >= 5e-3 for d in fut.done_each)
+    assert fut.done_at == max(fut.done_each)
+
+
+# ---------------------------------------------------------------------------
+# Futures RPC: pipelining and scatter-gather overlap
+# ---------------------------------------------------------------------------
+
+
+def test_demand_channel_pipelines_in_flight_requests():
+    node = make_store(1).shards[0]
+    key = all_keys()[0]
+    width = len(node.demand.lanes)
+    futs = [node.get_async(key, now=0.0) for _ in range(2 * width)]
+    per = futs[0].done_at
+    # the first `width` requests run concurrently; the next wave queues
+    assert all(abs(f.done_at - per) < 1e-12 for f in futs[:width])
+    assert all(abs(f.done_at - 2 * per) < 1e-12 for f in futs[width:])
+    assert all(f.issue_time == 0.0 for f in futs)
+
+
+def test_replicated_batch_spreads_across_equal_replicas():
+    """Load-aware planning: a batch of fully-replicated keys must split
+    across its replicas, not herd onto whichever node looks fastest."""
+    store = make_store(2, replication=2)
+    keys = all_keys()[:16]
+    # warm both EWMAs (equal flat latencies)
+    for k in keys:
+        store.get_async(k, now=0.0)
+    before = [s.gets for s in store.shards]
+    fut = store.multi_get_async(keys, now=1.0)
+    assert fut.values == [value_of(k) for k in keys]
+    served = [s.gets - b for s, b in zip(store.shards, before)]
+    assert all(n > 0 for n in served), served   # both nodes got a sub-batch
+    assert max(served) <= 3 * min(served), served
+
+
+def test_clock_sync_to_store_frontier():
+    store = make_store(2)
+    store.get_async(all_keys()[0], now=5.0)
+    assert store.frontier() > 5.0
+    from repro.core import Clock
+    c = Clock()
+    c.sync(store.frontier())
+    assert c.now == store.frontier()
+    c.sync(0.0)                        # never goes backwards
+    assert c.now == store.frontier()
+
+
+def test_scatter_gather_completes_at_slowest_node_not_sum():
+    store = make_store(4, replication=1)
+    by_node = {}
+    for k in all_keys():
+        by_node.setdefault(store.shard_of(k), k)
+    keys = list(by_node.values())
+    assert len(keys) == 4
+    serial = sum(store.shards[store.shard_of(k)].latency.get(1, VALUE_PAD)
+                 for k in keys)
+    fut = store.multi_get_async(keys, now=0.0)
+    assert fut.values == [value_of(k) for k in keys]
+    assert fut.done_at == max(fut.done_each)
+    assert fut.done_at < serial  # overlap: max across nodes, not sum
+
+
+def test_client_read_many_overlaps_and_fills_cache():
+    keys = all_keys()[:12]
+    serial_client = BaselineClient(make_store(4))
+    serial = sum(serial_client.read(k)[1] for k in keys)
+
+    from repro.core import PalpatineClient
+    client = PalpatineClient(make_store(4), small_palpatine())
+    values, lat = client.read_many(keys)
+    assert values == [value_of(k) for k in keys]
+    assert lat < serial          # in-flight overlap across shards
+    # all fetched values were demand-filled into the cache
+    values2, lat2 = client.read_many(keys)
+    assert values2 == values
+    assert lat2 < lat
+    # the monitoring log saw the batch as one in-order burst
+    assert client.logger.snapshot().sessions[-1] == tuple(
+        client.logger.db.item_id(k) for k in keys + keys)
+
+
+def test_interleave_supports_multi_read_ops():
+    store = make_store(4)
+    cluster = ClusterClient(store, ClusterConfig(
+        n_clients=1, palpatine=small_palpatine()))
+    keys = all_keys()[:5]
+    lats = cluster.run([[[("mr", keys), ("r", keys[0]), keys[1]]]])
+    assert len(lats[0]) == 3     # one latency per read op (mr counts once)
+
+
+# ---------------------------------------------------------------------------
+# Degraded node: replica-aware routing bounds the damage (deterministic e2e)
+# ---------------------------------------------------------------------------
+
+
+def _degraded_latencies(n_shards, slow_node=0, factor=10.0):
+    out = []
+    for i in range(n_shards):
+        mult = factor if i == slow_node else 1.0
+        out.append(LatencyModel(jitter_sigma=0.0, stall_frac=0.0, seed=i,
+                                rtt=500e-6 * mult,
+                                per_item_service=150e-6 * mult))
+    return out
+
+
+def _palpatine_mean_latency(replication, degraded, n_sessions=80):
+    lats_models = (_degraded_latencies(2) if degraded
+                   else [flat_latency(i) for i in range(2)])
+    store = ShardedDKVStore(2, latencies=lats_models,
+                            replication=replication)
+    store.load((k, value_of(k)) for k in all_keys())
+    cluster = ClusterClient(store, ClusterConfig(
+        n_clients=2, palpatine=small_palpatine()))
+    cluster.run([stream(500 + t, n_sessions=60) for t in range(2)])
+    cluster.mine_all()
+    cluster.exchange_patterns()
+    cluster.reset_stats()
+    lats = cluster.run([stream(600 + t, n_sessions=n_sessions)
+                        for t in range(2)])
+    return float(np.mean([l for ls in lats for l in ls]))
+
+
+def test_degraded_node_replication_bounds_mean_latency():
+    """One of two nodes 10x slow: R=1 collapses (half the keys live only on
+    the slow node) while R=2 with replica-aware routing stays within 2x of
+    its healthy-cluster run."""
+    healthy_r2 = _palpatine_mean_latency(replication=2, degraded=False)
+    degraded_r2 = _palpatine_mean_latency(replication=2, degraded=True)
+    healthy_r1 = _palpatine_mean_latency(replication=1, degraded=False)
+    degraded_r1 = _palpatine_mean_latency(replication=1, degraded=True)
+    assert degraded_r2 < 2.0 * healthy_r2
+    assert degraded_r1 > 3.0 * healthy_r1
+    assert degraded_r2 < degraded_r1
 
 
 # ---------------------------------------------------------------------------
