@@ -20,6 +20,7 @@ from .heuristics import HEURISTICS, HeuristicConfig, PrefetchEngine
 from .metastore import PatternMetastore
 from .mining import (
     ALGORITHMS,
+    BITMAP_ALGOS,
     MiningParams,
     Pattern,
     VerticalBitmaps,
@@ -32,7 +33,8 @@ from .ptree import PTree, PTreeIndex
 from .sessions import AccessLogger, Container, SequenceDatabase
 
 __all__ = [
-    "AccessLogger", "ALGORITHMS", "BaselineClient", "CacheStats", "Channel",
+    "AccessLogger", "ALGORITHMS", "BITMAP_ALGOS", "BaselineClient",
+    "CacheStats", "Channel",
     "Clock", "RPCFuture",
     "ClusterBaseline", "ClusterClient", "ClusterConfig", "Container",
     "HEURISTICS", "HeuristicConfig", "LatencyModel",

@@ -4,9 +4,9 @@ Implements the algorithm families the paper compares, over a shared packed
 vertical-bitmap engine (the SPAM/VMSP representation):
 
 * ``gsp``        — Apriori, breadth-first candidate generation.
-* ``spam``       — Apriori, depth-first over vertical bitmaps (all patterns).
+* ``spam``       — Apriori over vertical bitmaps (all patterns).
 * ``prefixspan`` — pattern-growth, depth-first projected databases.
-* ``vmsp``       — the paper's choice: SPAM-style DFS + *maximal* filtering.
+* ``vmsp``       — the paper's choice: vertical bitmaps + *maximal* filtering.
 
 Palpatine's configuration (paper §3.2/§5): single-item itemsets (an access
 log is totally ordered), ``maxgap=1`` (consecutive pattern items must be
@@ -17,16 +17,45 @@ from the padded session matrix first), so memory is O(freq_items × sessions ×
 words) — the back store may hold millions of containers but only the hot set
 enters the vertical representation.
 
-The support-counting inner loop (shift + AND + any-bit-per-session reduce)
-is the compute hot-spot; ``use_kernel=True`` routes the batched join through
-the Pallas TPU kernel in :mod:`repro.kernels.bitmap_support` (validated in
-interpret mode on CPU).
+Frontier engine
+---------------
+The bitmap miners (``gsp``/``spam``/``vmsp``) walk the pattern lattice
+*level-synchronously*: all surviving depth-``d`` prefixes are held as one
+packed ``(P, S, W)`` uint32 tensor and the whole frontier is expanded in a
+single fused ``(P, K)`` join against the candidate item bitmaps.  Extension
+slots are computed once per level (not per candidate batch), support counting
+visits only the sessions where a prefix actually occurs (the slot tensor is
+~``support/S`` dense at low minsup), and joined bitmaps are materialized only
+for the surviving ``(prefix, item)`` pairs.  Forward-extension maximality for
+VMSP is a per-prefix boolean mask over the ``(P, K)`` support matrix.
+
+``MiningParams.frontier_budget`` caps the transient join tensor in bytes:
+oversized frontiers are processed in budget-sized slabs, and a walk whose
+*single-prefix* ``K×S×W`` join already exceeds the cap (a walk-invariant
+quantity) spills entirely to the legacy per-node DFS walker (``_dfs_mine``),
+which remains the reference implementation for differential tests.
+
+With ``use_kernel=True`` the fused join runs on the Pallas TPU kernel
+``frontier_join_support`` in :mod:`repro.kernels.bitmap_support` (validated
+in interpret mode on CPU); the DFS spill path uses the per-prefix
+``sstep_join`` kernel.
+
+Incremental dynamic minsup
+--------------------------
+``mine_dynamic_minsup`` builds the packed ``VerticalBitmaps`` **once** at the
+floor support and re-thresholds per decay retry instead of re-scattering the
+session matrix per minsup step; callers that re-mine an unchanged backlog
+(``PalpatineClient.mine_now``) can pass a cached ``vb`` to skip the build
+entirely.  A prebuilt ``vb`` must have been constructed at a support count
+no higher than the one mined at — rows below the current threshold are
+filtered inside the engine.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+from collections import Counter
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -37,6 +66,7 @@ __all__ = [
     "MiningParams",
     "Pattern",
     "VerticalBitmaps",
+    "BITMAP_ALGOS",
     "mine",
     "gsp",
     "spam",
@@ -44,10 +74,15 @@ __all__ = [
     "vmsp",
     "maximal_filter",
     "mine_dynamic_minsup",
+    "dynamic_floor_count",
     "brute_force",
 ]
 
 _WORD = 32  # packed uint32 words
+
+#: byte cap on the boolean (n_sessions × n_items) dedup scratch in
+#: VerticalBitmaps.__init__; larger databases fall back to row-local sorts
+_SCATTER_BUDGET_BYTES = 64 * 1024 * 1024
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +94,9 @@ class MiningParams:
     max_len: int = 15
     maxgap: Optional[int] = 1    # 1 = contiguous (paper default); None = any
     use_kernel: bool = False     # route support counting through Pallas
+    # byte cap on the frontier engine's transient join tensor; a walk whose
+    # single-prefix K×S×W join exceeds it falls back to the DFS walker
+    frontier_budget: int = 64 * 1024 * 1024
 
     def minsup_count(self, n_sessions: int) -> int:
         return max(1, int(math.ceil(self.minsup * n_sessions)))
@@ -97,14 +135,26 @@ class VerticalBitmaps:
         if mat.size:
             sess, pos = np.nonzero(mat >= 0)
             item = mat[sess, pos]
-            # item support = #sessions containing the item (count unique pairs)
-            pair = sess.astype(np.int64) * max(db.n_items, 1) + item
-            uniq = np.unique(pair)
-            per_item = np.bincount(
-                (uniq % max(db.n_items, 1)).astype(np.int64), minlength=db.n_items
-            )
+            # item support = #sessions containing the item (count each
+            # (sess, item) pair once).  Two dedup strategies replace the
+            # global np.unique-over-encoded-pairs sort: a sort-free boolean
+            # scatter when the (n_sessions × n_items) scratch fits the byte
+            # budget, else per-row sorts of the (short) padded matrix —
+            # n_items is the *cumulative* vocabulary (tail() views share
+            # it), so the dense scratch must not scale with it unchecked.
+            if self.n_sessions * db.n_items <= _SCATTER_BUDGET_BYTES:
+                seen = np.zeros((self.n_sessions, db.n_items), bool)
+                seen[sess, item] = True
+                per_item = seen.sum(axis=0, dtype=np.int64)
+            else:
+                sm = np.sort(mat, axis=1)          # row-local: dups adjacent
+                keep = sm >= 0                     # drop -1 padding
+                keep[:, 1:] &= sm[:, 1:] != sm[:, :-1]
+                per_item = np.bincount(
+                    sm[keep], minlength=db.n_items
+                ).astype(np.int64)
             self.freq_items = np.nonzero(per_item >= minsup_count)[0].astype(np.int32)
-            self.freq_support = per_item[self.freq_items].astype(np.int64)
+            self.freq_support = per_item[self.freq_items]
             row_of = np.full(db.n_items, -1, np.int32)
             row_of[self.freq_items] = np.arange(self.freq_items.size, dtype=np.int32)
             keep = row_of[item] >= 0
@@ -170,7 +220,7 @@ class VerticalBitmaps:
         """#sessions with >=1 set bit.  (..., S, W) -> (...,)."""
         return np.any(b != 0, axis=-1).sum(axis=-1)
 
-    # -- batched s-step join (the hot loop; kernel-accelerated) -------------
+    # -- batched s-step join (per-prefix; used by the DFS spill path) -------
     def sstep_join(
         self,
         prefix_bits: np.ndarray,
@@ -195,41 +245,179 @@ class VerticalBitmaps:
 
 
 # ---------------------------------------------------------------------------
-# SPAM — DFS over vertical bitmaps, all frequent sequential patterns
+# Frontier engine — level-synchronous lattice walk, fused (P×K) support join
 # ---------------------------------------------------------------------------
 
 
-def _dfs_mine(
-    db: SequenceDatabase, params: MiningParams, maximal_only: bool
-) -> list[Pattern]:
-    vb = VerticalBitmaps(db, params.minsup_count(len(db)))
-    msc = params.minsup_count(len(db))
-    all_rows = np.arange(vb.freq_items.size)
-    out: list[Pattern] = []
+def _frontier_support(
+    slots: np.ndarray, cand: np.ndarray, params: MiningParams
+) -> np.ndarray:
+    """Fused support count for a whole frontier: (P,S,W) × (K,S,W) -> (P,K).
 
-    def dfs(pattern: tuple, pbits: np.ndarray, sup: int) -> None:
-        has_freq_ext = False
-        if len(pattern) < params.max_len and all_rows.size:
-            joined, sups = vb.sstep_join(
-                pbits, all_rows, params.maxgap, params.use_kernel
+    The numpy path is sparse over sessions: only ``(prefix, session)`` pairs
+    with a nonzero slot word are joined (a prefix's slot tensor is
+    ~``support/S`` dense, so this skips the vast majority of the dense
+    ``P×K×S×W`` work at low minsup).  Chunked so the transient stays under
+    ``params.frontier_budget`` bytes.  ``use_kernel=True`` routes the dense
+    join through the Pallas ``frontier_join_support`` kernel instead.
+    """
+    p_prefixes, n_sessions, n_words = slots.shape
+    k_items = cand.shape[0]
+    if p_prefixes == 0 or k_items == 0:
+        return np.zeros((p_prefixes, k_items), np.int64)
+    if params.use_kernel:
+        from repro.kernels.bitmap_support import ops as _ops
+
+        return np.asarray(_ops.frontier_join_support(slots, cand)).astype(np.int64)
+
+    sup = np.zeros((p_prefixes, k_items), np.int64)
+    pnz, snz = np.nonzero(slots.any(axis=-1))
+    if pnz.size == 0:
+        return sup
+    cand_t = np.ascontiguousarray(cand.transpose(1, 0, 2))  # (S, K, W)
+    chunk = max(1, int(params.frontier_budget) // (k_items * n_words * 4))
+    for i in range(0, pnz.size, chunk):
+        p_i, s_i = pnz[i : i + chunk], snz[i : i + chunk]
+        sl = slots[p_i, s_i]                                 # (c, W)
+        hit = ((sl[:, None, :] & cand_t[s_i]) != 0).any(-1)  # (c, K)
+        # pnz is sorted, so equal-prefix entries form contiguous runs:
+        # segment-reduce instead of scatter-add
+        uniq, starts = np.unique(p_i, return_index=True)
+        sup[uniq] += np.add.reduceat(hit.astype(np.int64), starts, axis=0)
+    return sup
+
+
+def _dfs_expand(
+    vb: VerticalBitmaps,
+    params: MiningParams,
+    msc: int,
+    cand_rows: np.ndarray,
+    cand_items: np.ndarray,
+    pattern: tuple,
+    pbits: np.ndarray,
+    sup: int,
+    maximal_only: bool,
+    out: list,
+) -> None:
+    """Legacy per-node DFS from one lattice node (reference implementation;
+    also the spill target when a frontier level exceeds the byte budget)."""
+    has_freq_ext = False
+    if len(pattern) < params.max_len and cand_rows.size:
+        joined, sups = vb.sstep_join(pbits, cand_rows, params.maxgap, params.use_kernel)
+        for k in np.nonzero(sups >= msc)[0]:
+            has_freq_ext = True
+            _dfs_expand(
+                vb, params, msc, cand_rows, cand_items,
+                pattern + (int(cand_items[k]),), joined[k], int(sups[k]),
+                maximal_only, out,
             )
-            for k in np.nonzero(sups >= msc)[0]:
-                has_freq_ext = True
-                dfs(
-                    pattern + (int(vb.freq_items[k]),),
-                    joined[k],
-                    int(sups[k]),
-                )
-        if len(pattern) >= params.min_len and (not maximal_only or not has_freq_ext):
-            out.append(Pattern(pattern, int(sup)))
+    if len(pattern) >= params.min_len and (not maximal_only or not has_freq_ext):
+        out.append(Pattern(pattern, int(sup)))
 
-    for r in range(vb.freq_items.size):
-        dfs((int(vb.freq_items[r]),), vb.bits[r], int(vb.freq_support[r]))
+
+def _dfs_mine(
+    db: SequenceDatabase,
+    params: MiningParams,
+    maximal_only: bool,
+    vb: Optional[VerticalBitmaps] = None,
+) -> list[Pattern]:
+    """Per-node DFS lattice walk (the pre-frontier engine, kept as the
+    differential reference and the budget-spill fallback)."""
+    msc = params.minsup_count(len(db))
+    if vb is None:
+        vb = VerticalBitmaps(db, msc)
+    rows = np.nonzero(vb.freq_support >= msc)[0]
+    cand_items = vb.freq_items[rows]
+    out: list[Pattern] = []
+    for i, r in enumerate(rows):
+        _dfs_expand(
+            vb, params, msc, rows, cand_items,
+            (int(cand_items[i]),), vb.bits[r], int(vb.freq_support[r]),
+            maximal_only, out,
+        )
     return out
 
 
-def spam(db: SequenceDatabase, params: MiningParams) -> list[Pattern]:
-    return _dfs_mine(db, params, maximal_only=False)
+def _frontier_mine(
+    db: SequenceDatabase,
+    params: MiningParams,
+    maximal_only: bool,
+    vb: Optional[VerticalBitmaps] = None,
+) -> list[Pattern]:
+    """Level-synchronous frontier miner (see module docstring).
+
+    Byte-identical Pattern output to :func:`_dfs_mine` (set-wise; emission
+    order is per-level instead of depth-first)."""
+    msc = params.minsup_count(len(db))
+    if vb is None:
+        vb = VerticalBitmaps(db, msc)
+    rows = np.nonzero(vb.freq_support >= msc)[0]
+    out: list[Pattern] = []
+    if rows.size == 0:
+        return out
+
+    cand = vb.bits[rows]                      # (K, S, W), fixed for the walk
+    cand_items = vb.freq_items[rows]
+    k_items = rows.size
+    per_prefix_bytes = k_items * vb.n_sessions * vb.n_words * 4
+    if per_prefix_bytes > params.frontier_budget:
+        # even a single prefix's K×S×W join exceeds the byte cap (the
+        # quantity is walk-invariant, so this is a whole-walk decision):
+        # fall back to the per-node DFS walker
+        for i, r in enumerate(rows):
+            _dfs_expand(
+                vb, params, msc, rows, cand_items,
+                (int(cand_items[i]),), vb.bits[r], int(vb.freq_support[r]),
+                maximal_only, out,
+            )
+        return out
+
+    patterns: list[tuple] = [(int(it),) for it in cand_items]
+    fbits = cand                              # depth-1 frontier = item bitmaps
+    fsups = vb.freq_support[rows].astype(np.int64)
+    depth = 1
+    while patterns:
+        if depth >= params.max_len:
+            # no further expansion possible: every frontier pattern is
+            # emitted (the DFS likewise skips the forward-extension check
+            # at max_len)
+            if depth >= params.min_len:
+                out.extend(Pattern(p, int(s)) for p, s in zip(patterns, fsups))
+            break
+        # extension slots for the whole frontier, once per level (reused
+        # across every support chunk below)
+        slots = vb.extension_slots(fbits, params.maxgap)
+        sup = _frontier_support(slots, cand, params)       # (P, K)
+        surv = sup >= msc
+        has_ext = surv.any(axis=1)                         # maximality mask
+        if depth >= params.min_len:
+            for p in np.nonzero(~has_ext)[0] if maximal_only else range(len(patterns)):
+                out.append(Pattern(patterns[p], int(fsups[p])))
+        pidx, kidx = np.nonzero(surv)
+        if pidx.size == 0:
+            break
+        # materialize joined bitmaps only for the surviving (prefix, item)
+        # pairs — they *are* the next frontier
+        fbits = slots[pidx] & cand[kidx]
+        fsups = sup[pidx, kidx]
+        patterns = [
+            patterns[p] + (int(cand_items[k]),) for p, k in zip(pidx, kidx)
+        ]
+        depth += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SPAM — vertical bitmaps, all frequent sequential patterns
+# ---------------------------------------------------------------------------
+
+
+def spam(
+    db: SequenceDatabase,
+    params: MiningParams,
+    vb: Optional[VerticalBitmaps] = None,
+) -> list[Pattern]:
+    return _frontier_mine(db, params, maximal_only=False, vb=vb)
 
 
 # ---------------------------------------------------------------------------
@@ -243,7 +431,10 @@ def maximal_filter(
     """Keep patterns not strictly included in another frequent pattern.
 
     For the contiguous case (maxgap=1) inclusion = contiguous subsequence;
-    otherwise classic subsequence inclusion.
+    otherwise classic subsequence inclusion.  The non-contiguous branch
+    buckets accepted maximal patterns by item, so a candidate only scans the
+    supersets sharing its rarest item (with an item-multiset prefilter)
+    instead of every accepted pattern.
     """
     if not patterns:
         return []
@@ -264,24 +455,52 @@ def maximal_filter(
             it = iter(b)
             return all(x in it for x in a)
 
+        mcounts: list[Counter] = []       # item multiset per accepted pattern
+        buckets: dict = {}                # item -> indices into `maximal`
         for p in ordered:
-            if not any(
-                len(m.items) > len(p.items) and subseq(p.items, m.items)
-                for m in maximal
-            ):
+            pc = Counter(p.items)
+            scan: Optional[list] = None   # smallest bucket among p's items
+            for it in pc:
+                bl = buckets.get(it)
+                if bl is None:
+                    scan = None           # no accepted pattern contains `it`
+                    break
+                if scan is None or len(bl) < len(scan):
+                    scan = bl
+            contained = False
+            if scan:
+                for mi in scan:
+                    m = maximal[mi]
+                    if len(m.items) <= len(p.items):
+                        continue
+                    mc = mcounts[mi]
+                    if all(mc[it] >= c for it, c in pc.items()) and subseq(
+                        p.items, m.items
+                    ):
+                        contained = True
+                        break
+            if not contained:
+                idx = len(maximal)
                 maximal.append(p)
+                mcounts.append(pc)
+                for it in pc:
+                    buckets.setdefault(it, []).append(idx)
     return maximal
 
 
-def vmsp(db: SequenceDatabase, params: MiningParams) -> list[Pattern]:
-    """VMSP-style mining: DFS with vertical bitmaps + maximality.
+def vmsp(
+    db: SequenceDatabase,
+    params: MiningParams,
+    vb: Optional[VerticalBitmaps] = None,
+) -> list[Pattern]:
+    """VMSP-style mining: frontier engine + maximality.
 
-    Non-maximal patterns are pruned during the DFS via the forward-extension
-    check (a pattern with a frequent s-extension cannot be maximal); a global
-    inclusion filter removes backward/infix containment, matching VMSP's
-    output semantics.
+    Non-maximal patterns are pruned during the frontier walk via the
+    forward-extension mask (a pattern with a frequent s-extension cannot be
+    maximal); a global inclusion filter removes backward/infix containment,
+    matching VMSP's output semantics.
     """
-    candidates = _dfs_mine(db, params, maximal_only=True)
+    candidates = _frontier_mine(db, params, maximal_only=True, vb=vb)
     return maximal_filter(candidates, params.maxgap)
 
 
@@ -329,47 +548,21 @@ def prefixspan(db: SequenceDatabase, params: MiningParams) -> list[Pattern]:
 
 
 # ---------------------------------------------------------------------------
-# GSP — Apriori BFS candidate generation
+# GSP — Apriori BFS over the frontier engine
 # ---------------------------------------------------------------------------
 
 
-def gsp(db: SequenceDatabase, params: MiningParams) -> list[Pattern]:
-    vb = VerticalBitmaps(db, params.minsup_count(len(db)))
-    msc = params.minsup_count(len(db))
-    level = {
-        (int(vb.freq_items[r]),): (vb.bits[r], int(vb.freq_support[r]))
-        for r in range(vb.freq_items.size)
-    }
-    out: list[Pattern] = []
-    length = 1
-    while level and length < params.max_len:
-        # candidate generation: join p, q with p[1:] == q[:-1]
-        # (keying by each pattern's prefix makes the apriori check — the
-        # candidate's suffix pat[1:]+(t,) is frequent — hold by construction)
-        by_prefix: dict = {}
-        for pat in level:
-            by_prefix.setdefault(pat[:-1], []).append(pat)
-        nxt: dict = {}
-        for pat, (pbits, _) in level.items():
-            tails = [q[-1] for q in by_prefix.get(pat[1:], [])]
-            for t in dict.fromkeys(tails):
-                cand = pat + (t,)
-                if cand in nxt:
-                    continue
-                joined, sup = vb.sstep_join(
-                    pbits,
-                    np.array([vb.row(t)]),
-                    params.maxgap,
-                    params.use_kernel,
-                )
-                if sup[0] >= msc:
-                    nxt[cand] = (joined[0], int(sup[0]))
-        length += 1
-        level = nxt
-        for pat, (_, sup) in level.items():
-            if params.min_len <= len(pat) <= params.max_len:
-                out.append(Pattern(pat, sup))
-    return out
+def gsp(
+    db: SequenceDatabase,
+    params: MiningParams,
+    vb: Optional[VerticalBitmaps] = None,
+) -> list[Pattern]:
+    """GSP's level-wise walk *is* the frontier engine: each level holds all
+    frequent length-d sequences, candidates are their one-item extensions,
+    and the apriori property holds by construction (only frequent prefixes
+    are extended, only frequent items are candidate tails).  Support counting
+    uses the fused vertical-bitmap join instead of horizontal scans."""
+    return _frontier_mine(db, params, maximal_only=False, vb=vb)
 
 
 # ---------------------------------------------------------------------------
@@ -415,9 +608,34 @@ ALGORITHMS: dict[str, Callable] = {
     "vmsp": vmsp,
 }
 
+#: algorithms that run on the shared VerticalBitmaps engine and accept a
+#: prebuilt ``vb`` (incremental dynamic-minsup / backlog-unchanged reuse)
+BITMAP_ALGOS = frozenset({"gsp", "spam", "vmsp"})
 
-def mine(db: SequenceDatabase, params: MiningParams, algo: str = "vmsp") -> list[Pattern]:
-    return ALGORITHMS[algo](db, params)
+
+def mine(
+    db: SequenceDatabase,
+    params: MiningParams,
+    algo: str = "vmsp",
+    vb: Optional[VerticalBitmaps] = None,
+) -> list[Pattern]:
+    fn = ALGORITHMS[algo]
+    if vb is not None and algo in BITMAP_ALGOS:
+        return fn(db, params, vb=vb)
+    return fn(db, params)
+
+
+def dynamic_floor_count(
+    params: MiningParams, n_sessions: int, start: float, floor: float
+) -> int:
+    """The support count :func:`mine_dynamic_minsup` builds its bitmaps at —
+    callers that cache a ``vb`` for it MUST use this same count (a cache
+    built at a higher count would silently drop frequent items).  The
+    ``min(floor, start)`` clamp guards the start < floor corner, where the
+    first (and only) retry mines below the floor."""
+    return dataclasses.replace(
+        params, minsup=min(floor, start)
+    ).minsup_count(n_sessions)
 
 
 def mine_dynamic_minsup(
@@ -428,13 +646,36 @@ def mine_dynamic_minsup(
     floor: float = 0.01,
     decay: float = 0.5,
     min_patterns: int = 16,
+    vb: Optional[VerticalBitmaps] = None,
+    vb_factory: Optional[Callable[[], VerticalBitmaps]] = None,
 ) -> tuple[list[Pattern], float]:
     """Paper §4.2: start with a high minsup and decay it until enough
-    frequent sequences are discovered.  Returns (patterns, used_minsup)."""
+    frequent sequences are discovered.  Returns (patterns, used_minsup).
+
+    Incremental: for the bitmap algorithms the packed ``VerticalBitmaps``
+    are built once at the *floor* support — lazily, on the first decay — and
+    re-thresholded per retry (every retry mines at minsup >= floor, so the
+    floor-level bitmaps are a superset of what each retry needs; a backlog
+    satisfied at ``start`` never pays the floor build).  Pass ``vb`` — built
+    at or below the floor count (:func:`dynamic_floor_count`) — to reuse
+    bitmaps across calls on an unchanged backlog, or ``vb_factory`` to keep
+    the build lazy while still capturing it for caching (it is only invoked
+    if a decay retry actually happens, and must build at that same count).
+    """
+    lazy_floor = vb is None and algo in BITMAP_ALGOS and len(db) > 0
     minsup = start
     patterns: list[Pattern] = []
     while True:
-        patterns = mine(db, dataclasses.replace(params, minsup=minsup), algo)
+        patterns = mine(db, dataclasses.replace(params, minsup=minsup), algo, vb=vb)
         if len(patterns) >= min_patterns or minsup <= floor:
             return patterns, minsup
+        if lazy_floor and vb is None:
+            # first decay: build the floor-level bitmaps once and reuse them
+            # for every retry.  Deferred past the first mine so a backlog
+            # satisfied at `start` never pays the (much larger) floor build.
+            if vb_factory is not None:
+                vb = vb_factory()
+            else:
+                vb = VerticalBitmaps(
+                    db, dynamic_floor_count(params, len(db), start, floor))
         minsup = max(floor, minsup * decay)

@@ -16,6 +16,14 @@ pattern.
 Blocks default to (8 candidates × 512 sessions × W words): one uint32 tile
 is 8·512·W·4 B = 16 KiB·W, three live blocks ≈ 48·W KiB ≪ VMEM, and both
 tile dims are multiples of the (8, 128) VPU lane grid.
+
+Two kernels share this layout:
+
+* ``sstep_join_support_pallas`` — per-prefix (1×K) join, returning joined
+  bitmaps + support (the DFS walker's primitive);
+* ``frontier_join_support_pallas`` — the level-synchronous miner's fused
+  (P×K) support join over a whole frontier of prefixes, 3-D grid tiling
+  (P, K) in parallel with the session dimension accumulated sequentially.
 """
 
 from __future__ import annotations
@@ -29,10 +37,17 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
 
-__all__ = ["sstep_join_support_pallas"]
+__all__ = ["sstep_join_support_pallas", "frontier_join_support_pallas"]
 
 DEFAULT_BLOCK_K = 8
 DEFAULT_BLOCK_S = 512
+
+# frontier kernel tiles: the fused (bP, bK, bS, W) AND temporary is
+# 8·8·128·W·4 B = 32 KiB·W, comfortably inside VMEM, and the (bP, bK)
+# support tile matches the (8, 128)-lane VPU grid after broadcast
+DEFAULT_BLOCK_P = 8
+DEFAULT_BLOCK_FK = 8
+DEFAULT_BLOCK_FS = 128
 
 
 def _kernel(slots_ref, cand_ref, joined_ref, support_ref):
@@ -96,3 +111,69 @@ def sstep_join_support_pallas(
         interpret=interpret,
     )(slots, cand)
     return joined, support[:, 0]
+
+
+def _frontier_kernel(slots_ref, cand_ref, support_ref):
+    s_idx = pl.program_id(2)
+    slots = slots_ref[...]                      # (bP, bS, W) uint32
+    cand = cand_ref[...]                        # (bK, bS, W) uint32
+    joined = jnp.bitwise_and(slots[:, None, :, :], cand[None, :, :, :])
+    any_bit = jnp.any(joined != 0, axis=-1)     # (bP, bK, bS)
+    counts = jnp.sum(any_bit.astype(jnp.int32), axis=-1)  # (bP, bK)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        support_ref[...] = counts
+
+    @pl.when(s_idx != 0)
+    def _acc():
+        support_ref[...] += counts
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_p", "block_k", "block_s", "interpret")
+)
+def frontier_join_support_pallas(
+    slots: jnp.ndarray,
+    cand: jnp.ndarray,
+    *,
+    block_p: int = DEFAULT_BLOCK_P,
+    block_k: int = DEFAULT_BLOCK_FK,
+    block_s: int = DEFAULT_BLOCK_FS,
+    interpret: bool = False,
+):
+    """Frontier-batched support join: (P,S,W) × (K,S,W) -> (P,K) int32.
+
+    The level-synchronous miner's fused join — one launch counts support for
+    every (prefix, candidate-item) pair of a whole lattice level.  The grid
+    tiles (P, K) in parallel and runs the session dimension sequentially,
+    accumulating into the revisited (bP, bK) output block.  Joined bitmaps
+    are deliberately not written back: the miner materializes them only for
+    the surviving pairs.
+
+    Inputs must be pre-padded: P % block_p == K % block_k == S % block_s == 0
+    (the ops.py wrapper pads; padding rows/sessions contribute zero support).
+    """
+    p_prefixes, n_sessions, n_words = slots.shape
+    k_items = cand.shape[0]
+    assert cand.shape == (k_items, n_sessions, n_words)
+    assert (p_prefixes % block_p == 0 and k_items % block_k == 0
+            and n_sessions % block_s == 0)
+    grid = (p_prefixes // block_p, k_items // block_k, n_sessions // block_s)
+
+    support = pl.pallas_call(
+        _frontier_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_p, block_s, n_words), lambda p, k, s: (p, s, 0)),
+            pl.BlockSpec((block_k, block_s, n_words), lambda p, k, s: (k, s, 0)),
+        ],
+        # revisited across the s grid dim -> accumulates
+        out_specs=pl.BlockSpec((block_p, block_k), lambda p, k, s: (p, k)),
+        out_shape=jax.ShapeDtypeStruct((p_prefixes, k_items), jnp.int32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(slots, cand)
+    return support

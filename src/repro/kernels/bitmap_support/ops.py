@@ -1,8 +1,9 @@
-"""Jit'd public wrapper for the bitmap support kernel.
+"""Jit'd public wrappers for the bitmap support kernels.
 
-Pads (K, S) to block multiples, dispatches to the Pallas kernel (interpret
-mode on CPU hosts, compiled on TPU), and unpads.  ``sstep_join_support`` is
-the entry point :mod:`repro.core.mining` uses when ``use_kernel=True``.
+Pad to block multiples, dispatch to the Pallas kernels (interpret mode on
+CPU hosts, compiled on TPU), and unpad.  ``frontier_join_support`` is the
+entry point the level-synchronous miner uses when ``use_kernel=True``;
+``sstep_join_support`` serves the per-prefix DFS spill path.
 """
 
 from __future__ import annotations
@@ -12,12 +13,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from .bitmap_support import (
+    DEFAULT_BLOCK_FK,
+    DEFAULT_BLOCK_FS,
     DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_P,
     DEFAULT_BLOCK_S,
+    frontier_join_support_pallas,
     sstep_join_support_pallas,
 )
 
-__all__ = ["sstep_join_support"]
+__all__ = ["sstep_join_support", "frontier_join_support"]
 
 
 def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
@@ -54,3 +59,36 @@ def sstep_join_support(
         slots_p, cand_p, block_k=bk, block_s=bs, interpret=interpret
     )
     return joined[:k_items, :n_sessions], support[:k_items]
+
+
+def frontier_join_support(
+    slots,
+    cand,
+    *,
+    block_p: int | None = None,
+    block_k: int | None = None,
+    block_s: int | None = None,
+    interpret: bool | None = None,
+):
+    """(P, S, W) × (K, S, W) -> support (P, K) int32.
+
+    Zero-padding is support-neutral: padded prefixes/candidates/sessions
+    contribute no set bits, so their counts are 0 and are sliced off."""
+    slots = jnp.asarray(slots, jnp.uint32)
+    cand = jnp.asarray(cand, jnp.uint32)
+    p_prefixes, n_sessions, _ = slots.shape
+    k_items = cand.shape[0]
+    if p_prefixes == 0 or k_items == 0:
+        return jnp.zeros((p_prefixes, k_items), jnp.int32)
+    bp = block_p or min(DEFAULT_BLOCK_P, max(1, p_prefixes))
+    bk = block_k or min(DEFAULT_BLOCK_FK, max(1, k_items))
+    bs = block_s or DEFAULT_BLOCK_FS
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    slots_p = _pad_to(_pad_to(slots, 1, bs), 0, bp)
+    cand_p = _pad_to(_pad_to(cand, 1, bs), 0, bk)
+    support = frontier_join_support_pallas(
+        slots_p, cand_p, block_p=bp, block_k=bk, block_s=bs,
+        interpret=interpret,
+    )
+    return support[:p_prefixes, :k_items]

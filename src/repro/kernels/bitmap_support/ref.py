@@ -1,8 +1,10 @@
-"""Pure-jnp oracle for the VMSP s-step join + support count."""
+"""Oracles for the VMSP join kernels: the pure-jnp per-prefix s-step join
+and the vectorized numpy frontier (P×K) support join."""
 
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["sstep_join_support"]
+__all__ = ["sstep_join_support", "frontier_join_support"]
 
 
 def sstep_join_support(slots: jnp.ndarray, cand: jnp.ndarray):
@@ -21,3 +23,22 @@ def sstep_join_support(slots: jnp.ndarray, cand: jnp.ndarray):
     any_bit = jnp.any(joined != 0, axis=-1)          # (K, S)
     support = jnp.sum(any_bit.astype(jnp.int32), axis=-1)
     return joined, support
+
+
+def frontier_join_support(slots, cand):
+    """Vectorized numpy reference for the frontier-batched support join.
+
+    Args:
+      slots: (P, S, W) uint32 — per-prefix extension slots (already shifted
+             by the gap rule) for a whole frontier level.
+      cand:  (K, S, W) uint32 — per-candidate-item occurrence bitmaps.
+
+    Returns:
+      support: (P, K) int32 — #sessions where prefix p extended by item k
+               still occurs.  (Joined bitmaps are not materialized; the
+               mining engine only joins the surviving pairs.)
+    """
+    slots = np.asarray(slots, np.uint32)
+    cand = np.asarray(cand, np.uint32)
+    joined = slots[:, None, :, :] & cand[None, :, :, :]   # (P, K, S, W)
+    return np.any(joined != 0, axis=-1).sum(axis=-1, dtype=np.int32)

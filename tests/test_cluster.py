@@ -586,3 +586,31 @@ def test_cluster_palpatine_beats_cluster_baseline():
     assert np.mean(pal_lats) < np.mean(base_lats)
     agg = cluster.aggregate_stats()
     assert agg.prefetches > 0 and agg.hit_rate > 0.2
+
+
+# ---------------------------------------------------------------------------
+# Gossip-triggered re-mine: unchanged tenants are skipped, but only when
+# truly unchanged (a gossip merge into the metastore forces the full run)
+# ---------------------------------------------------------------------------
+
+
+def test_mine_all_skips_only_truly_unchanged_tenants():
+    store = make_store(2)
+    store.load((k, value_of(k)) for k in all_keys())
+    cluster = ClusterClient(store, ClusterConfig(
+        n_clients=2, palpatine=small_palpatine()))
+    cluster.run([stream(700 + t, n_sessions=40) for t in range(2)])
+
+    n1 = cluster.mine_all()
+    runs = [t.mining_runs for t in cluster.tenants]
+    # no new reads, no metastore changes -> every tenant skipped, same count
+    assert cluster.mine_all() == n1
+    assert [t.mining_runs for t in cluster.tenants] == runs
+    # a gossip round merges foreign patterns (mine_now would *replace*
+    # them), so the next sweep must re-mine everyone
+    cluster.exchange_patterns()
+    cluster.mine_all()
+    assert [t.mining_runs for t in cluster.tenants] == [r + 1 for r in runs]
+    # forcing also re-mines
+    cluster.mine_all(skip_unchanged=False)
+    assert [t.mining_runs for t in cluster.tenants] == [r + 2 for r in runs]

@@ -125,3 +125,23 @@ def test_planted_pattern_is_found(algo):
     params = MiningParams(minsup=0.5, min_len=3, max_len=6, maxgap=1)
     found = {p.items: p.support for p in ALGORITHMS[algo](db, params)}
     assert found.get(enc) == 15  # 20 sessions minus the 5 multiples of 4
+
+
+# ---------------------------------------------------------------------------
+# Frontier engine vs the legacy per-node DFS (the pre-frontier walker is
+# kept in-tree as the reference implementation and budget-spill target)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("maximal_only", [False, True])
+@pytest.mark.parametrize("minsup,min_len,max_len,maxgap", GRID)
+def test_frontier_engine_matches_legacy_dfs(minsup, min_len, max_len,
+                                            maxgap, maximal_only):
+    from repro.core.mining import _dfs_mine, _frontier_mine
+
+    params = MiningParams(minsup=minsup, min_len=min_len,
+                          max_len=max_len, maxgap=maxgap)
+    for seed in range(6):
+        db = random_db(seed)
+        assert as_set(_frontier_mine(db, params, maximal_only)) == as_set(
+            _dfs_mine(db, params, maximal_only))

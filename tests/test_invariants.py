@@ -220,3 +220,47 @@ def test_ptree_walk_follows_inserted_paths_exactly(seed):
         # another pattern extends it
         ext = p.items + (99,)
         assert idx.trees[p.items[0]].walk(ext) is None
+
+
+# ---------------------------------------------------------------------------
+# Vertical bitmap padding (mining frontier engine)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_shifted_padding_bits_never_leak_into_support(seed):
+    """``extension_slots`` can shift a session's last-position bit into the
+    padding region (or across a word boundary into a padding word).  Joining
+    with an item bitmap must mask every such bit — support counts and joined
+    frontiers may only ever reference real positions."""
+    import numpy as np
+
+    from repro.core import MiningParams, SequenceDatabase, VerticalBitmaps
+    from repro.core.mining import _frontier_support
+
+    rng = np.random.default_rng(seed)
+    # lengths straddle the 32-bit word boundary so both padding-within-word
+    # and padding-word carries occur
+    sessions = [
+        rng.integers(0, 5, size=int(length)).tolist()
+        for length in rng.integers(1, 40, size=30)
+    ]
+    db = SequenceDatabase.from_sessions(sessions)
+    vb = VerticalBitmaps(db, 1)
+    lengths = np.array([len(s) for s in db.sessions])
+    # valid-position mask per (session, word)
+    valid = np.zeros((vb.n_sessions, vb.n_words), np.uint32)
+    for s, n in enumerate(lengths):
+        for p in range(int(n)):
+            valid[s, p // 32] |= np.uint32(1) << np.uint32(p % 32)
+
+    for maxgap in (1, 2, None):
+        slots = vb.extension_slots(vb.bits, maxgap)      # (P, S, W)
+        joined = slots[:, None, :, :] & vb.bits[None, :, :, :]
+        assert not np.any(joined & ~valid), (
+            f"padding bit leaked into a joined bitmap (maxgap={maxgap})")
+        # support computed from the fused join == support recounted from
+        # the (verified padding-free) joined bitmaps
+        sup = _frontier_support(slots, vb.bits, MiningParams(maxgap=maxgap))
+        recount = np.any(joined != 0, axis=-1).sum(axis=-1)
+        np.testing.assert_array_equal(sup, recount)

@@ -49,10 +49,44 @@ def test_bitmap_support_sparse_and_empty():
     assert np.asarray(s).shape == (0,)
 
 
-def test_bitmap_kernel_agrees_with_mining_numpy_path():
-    """The mining engine gives identical results with and without kernel."""
-    from repro.core import ALGORITHMS, MiningParams, SequenceDatabase
-    import dataclasses
+@pytest.mark.parametrize("p_prefixes,k_items,n_sessions,n_words", [
+    (1, 1, 7, 1),
+    (5, 9, 100, 2),
+    (8, 8, 128, 1),      # exact blocks
+    (9, 17, 130, 3),     # off-by-one padding in all three dims
+    (16, 32, 512, 1),
+    (3, 2, 1, 1),
+])
+def test_frontier_join_support_matches_ref(p_prefixes, k_items, n_sessions,
+                                           n_words):
+    rng = np.random.default_rng(p_prefixes * 1000 + k_items + n_sessions)
+    slots = rng.integers(
+        0, 2 ** 32, size=(p_prefixes, n_sessions, n_words), dtype=np.uint32)
+    cand = rng.integers(
+        0, 2 ** 32, size=(k_items, n_sessions, n_words), dtype=np.uint32)
+    got = np.asarray(bm_ops.frontier_join_support(slots, cand))
+    want = bm_ref.frontier_join_support(slots, cand)
+    assert got.dtype == np.int32
+    np.testing.assert_array_equal(got, want)
+
+
+def test_frontier_join_support_empty_edges():
+    zero = np.zeros((0, 16, 1), np.uint32)
+    some = np.zeros((4, 16, 1), np.uint32)
+    assert np.asarray(bm_ops.frontier_join_support(zero, some)).shape == (0, 4)
+    assert np.asarray(bm_ops.frontier_join_support(some, zero)).shape == (4, 0)
+    # padded sessions/prefixes/candidates contribute zero support
+    slots = np.zeros((2, 5, 1), np.uint32)
+    cand = np.zeros((3, 5, 1), np.uint32)
+    slots[1, 4, 0] = cand[2, 4, 0] = 1
+    sup = np.asarray(bm_ops.frontier_join_support(slots, cand))
+    want = np.zeros((2, 3), np.int32)
+    want[1, 2] = 1
+    np.testing.assert_array_equal(sup, want)
+
+
+def _planted_db():
+    from repro.core import SequenceDatabase
 
     rng = np.random.default_rng(5)
     sessions = []
@@ -61,12 +95,35 @@ def test_bitmap_kernel_agrees_with_mining_numpy_path():
         if rng.random() < 0.5:
             s[:4] = [1, 2, 3, 4]  # planted frequent sequence
         sessions.append(s)
-    db = SequenceDatabase.from_sessions(sessions)
+    return SequenceDatabase.from_sessions(sessions)
+
+
+def test_bitmap_kernel_agrees_with_mining_numpy_path():
+    """The mining engine gives identical results with and without the
+    frontier kernel."""
+    from repro.core import ALGORITHMS, MiningParams
+    import dataclasses
+
+    db = _planted_db()
     params = MiningParams(minsup=0.1, min_len=3, max_len=6, maxgap=1)
     plain = {(p.items, p.support) for p in ALGORITHMS["vmsp"](db, params)}
     kern = {(p.items, p.support) for p in ALGORITHMS["vmsp"](
         db, dataclasses.replace(params, use_kernel=True))}
     assert plain == kern and plain
+
+
+def test_bitmap_kernel_spill_path_agrees():
+    """frontier_budget=1 forces the DFS spill, which drives the per-prefix
+    sstep kernel instead of the fused frontier kernel — same patterns."""
+    from repro.core import ALGORITHMS, MiningParams
+    import dataclasses
+
+    db = _planted_db()
+    params = MiningParams(minsup=0.1, min_len=3, max_len=6, maxgap=1)
+    plain = {(p.items, p.support) for p in ALGORITHMS["vmsp"](db, params)}
+    spill = {(p.items, p.support) for p in ALGORITHMS["vmsp"](
+        db, dataclasses.replace(params, use_kernel=True, frontier_budget=1))}
+    assert plain == spill and plain
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,8 @@
-"""Mining correctness: all algorithms vs the brute-force oracle."""
+"""Mining correctness: all algorithms vs the brute-force oracle, and the
+frontier engine vs the legacy DFS walker it replaced."""
+
+import dataclasses
+from collections import Counter
 
 import numpy as np
 import pytest
@@ -10,9 +14,15 @@ from repro.core import (
     SequenceDatabase,
     VerticalBitmaps,
     brute_force,
+    mine,
     mine_dynamic_minsup,
 )
-from repro.core.mining import maximal_filter
+from repro.core.mining import (
+    _dfs_mine,
+    _frontier_mine,
+    _frontier_support,
+    maximal_filter,
+)
 
 pytestmark = pytest.mark.tier1
 
@@ -113,3 +123,146 @@ def test_support_semantics_multiple_occurrences_count_once():
     params = MiningParams(minsup=1.0, min_len=3, max_len=3, maxgap=1)
     pats = {p.items: p.support for p in ALGORITHMS["spam"](db, params)}
     assert pats[(1, 2, 3)] == 1
+
+
+# ---------------------------------------------------------------------------
+# Frontier engine vs the legacy DFS walker
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("maximal_only", [False, True])
+@pytest.mark.parametrize("maxgap", [1, 2, None])
+@pytest.mark.parametrize("minsup", [0.05, 0.1, 0.25])
+def test_frontier_matches_legacy_dfs(maximal_only, maxgap, minsup):
+    db = make_db(seed=11)
+    params = MiningParams(minsup=minsup, min_len=3, max_len=7, maxgap=maxgap)
+    want = canon(_dfs_mine(db, params, maximal_only=maximal_only))
+    got = canon(_frontier_mine(db, params, maximal_only=maximal_only))
+    assert got == want
+
+
+@pytest.mark.parametrize("budget", [1, 20_000])
+@pytest.mark.parametrize("algo", ["spam", "vmsp", "gsp"])
+def test_frontier_budget_spill_is_output_identical(budget, algo):
+    """A byte cap small enough to force the DFS spill (budget=1) or
+    single-prefix support chunks (20 kB) never changes the pattern set."""
+    db = make_db(seed=4)
+    params = MiningParams(minsup=0.1, min_len=3, max_len=6, maxgap=1)
+    capped = dataclasses.replace(params, frontier_budget=budget)
+    assert canon(ALGORITHMS[algo](db, capped)) == canon(
+        ALGORITHMS[algo](db, params))
+
+
+def test_frontier_support_matches_scalar_sstep():
+    """The fused (P,K) numpy support join == per-prefix scalar sstep joins
+    (the tier-1 kernel-vs-ref parity for the numpy path)."""
+    db = make_db(seed=2)
+    params = MiningParams()
+    for maxgap in (1, 2, None):
+        vb = VerticalBitmaps(db, 2)
+        rows = np.arange(vb.freq_items.size)
+        slots = vb.extension_slots(vb.bits, maxgap)      # (P,S,W), P == K
+        sup = _frontier_support(slots, vb.bits, params)
+        for p in range(rows.size):
+            _, want = vb.sstep_join(vb.bits[p], rows, maxgap)
+            np.testing.assert_array_equal(sup[p], want)
+
+
+def test_frontier_support_tiny_budget_chunks_agree():
+    db = make_db(seed=6)
+    vb = VerticalBitmaps(db, 2)
+    slots = vb.extension_slots(vb.bits, 1)
+    full = _frontier_support(slots, vb.bits, MiningParams())
+    tiny = _frontier_support(
+        slots, vb.bits, MiningParams(frontier_budget=1))
+    np.testing.assert_array_equal(full, tiny)
+
+
+# ---------------------------------------------------------------------------
+# Incremental dynamic minsup + bitmap construction/reuse
+# ---------------------------------------------------------------------------
+
+
+def test_dynamic_minsup_incremental_matches_fresh_rebuilds():
+    """One floor-level bitmap build re-thresholded per retry == rebuilding
+    from scratch at every decayed minsup."""
+    db = make_db(n_sessions=80)
+    params = MiningParams(min_len=3, max_len=6, maxgap=1)
+    pats, used = mine_dynamic_minsup(
+        db, params, min_patterns=30, start=0.8, floor=0.02)
+    minsup, fresh = 0.8, []
+    while True:
+        fresh = mine(db, dataclasses.replace(params, minsup=minsup), "vmsp")
+        if len(fresh) >= 30 or minsup <= 0.02:
+            break
+        minsup = max(0.02, minsup * 0.5)
+    assert used == pytest.approx(minsup)
+    assert canon(pats) == canon(fresh)
+
+
+def test_prebuilt_bitmaps_below_threshold_give_identical_results():
+    db = make_db(seed=5)
+    params = MiningParams(minsup=0.15, min_len=3, max_len=6, maxgap=1)
+    vb = VerticalBitmaps(db, 1)  # floor build: superset of frequent items
+    for algo in ("spam", "vmsp", "gsp"):
+        assert canon(mine(db, params, algo, vb=vb)) == canon(
+            mine(db, params, algo))
+
+
+def test_vertical_bitmaps_scatter_support_matches_naive():
+    db = make_db(seed=9)
+    naive = Counter()
+    for s in db.sessions:
+        naive.update(set(s))
+    vb = VerticalBitmaps(db, 2)
+    assert set(vb.freq_items.tolist()) == {
+        i for i, c in naive.items() if c >= 2}
+    for item, sup in zip(vb.freq_items, vb.freq_support):
+        assert naive[int(item)] == int(sup)
+
+
+# ---------------------------------------------------------------------------
+# maximal_filter bucketed non-contiguous branch
+# ---------------------------------------------------------------------------
+
+
+def _naive_maximal(patterns):
+    def subseq(a, b):
+        it = iter(b)
+        return all(x in it for x in a)
+
+    ordered = sorted(patterns, key=len, reverse=True)
+    out = []
+    for p in ordered:
+        if not any(len(m.items) > len(p.items) and subseq(p.items, m.items)
+                   for m in out):
+            out.append(p)
+    return out
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("maxgap", [2, None])
+def test_maximal_filter_bucketed_matches_naive(seed, maxgap):
+    rng = np.random.default_rng(seed)
+    pats = list({
+        tuple(rng.integers(0, 6, size=int(rng.integers(1, 7))).tolist())
+        for _ in range(60)})
+    patterns = [Pattern(p, int(rng.integers(1, 9))) for p in pats]
+    got = maximal_filter(patterns, maxgap)
+    want = _naive_maximal(patterns)
+    assert canon(got) == canon(want)
+    assert [p.items for p in got] == [p.items for p in want]  # same order
+
+
+def test_vertical_bitmaps_rowsort_fallback_matches_scatter(monkeypatch):
+    """Databases whose (sessions × cumulative-vocabulary) scratch exceeds
+    the byte budget dedup via row-local sorts — identical support counts."""
+    import repro.core.mining as mining_mod
+
+    db = make_db(seed=13)
+    scatter = VerticalBitmaps(db, 2)
+    monkeypatch.setattr(mining_mod, "_SCATTER_BUDGET_BYTES", 0)
+    rowsort = VerticalBitmaps(db, 2)
+    np.testing.assert_array_equal(scatter.freq_items, rowsort.freq_items)
+    np.testing.assert_array_equal(scatter.freq_support, rowsort.freq_support)
+    np.testing.assert_array_equal(scatter.bits, rowsort.bits)
