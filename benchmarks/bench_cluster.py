@@ -1,7 +1,7 @@
 """Sharded-cluster scaling (beyond-paper): aggregate + per-shard hit ratio
-and mean read latency vs storage-node count and concurrent-client count, on
-the TPC-C-style workload, with the gossiped pattern metastore warming every
-tenant from the cluster's pooled mining.
+and read-latency percentiles vs storage-node count and concurrent-client
+count, on the TPC-C-style workload, with the gossiped pattern metastore
+warming every tenant from the cluster's pooled mining.
 
 Rows:
   cluster_s{S}_c{M}_baseline  — M unmodified clients, S storage nodes
@@ -14,6 +14,25 @@ unreplicated cluster collapses on every key homed on the slow node.
 
   cluster_degraded_r{R}_{healthy,degraded} — per-replication-factor runs
   cluster_degraded_r{R}_ratio              — degraded/healthy mean + p99
+
+The elastic sweep scales the ring out mid-workload (membership subsystem):
+steady state, the post-scale window right after the targeted invalidation
+storm, and the recovery window once prefetching re-warms the remapped keys.
+
+  cluster_elastic_{steady,post_scale,recovered} — hit ratio + p99 windows
+  cluster_elastic_recovery                      — recovered/steady hit ratio
+                                                  + moved key fraction
+
+CLI::
+
+    python -m benchmarks.bench_cluster --quick \
+        --check BENCH_cluster.json --out BENCH_cluster.json
+
+``--check`` compares against committed numbers *before* overwriting them
+(the CI perf-smoke gate): p99 latencies gate on their sum (noise-robust),
+hit ratios and the elastic recovery ratio fail individually when they fall
+below committed/max_regression, and the moved-key fraction fails when it
+grows past committed×max_regression (movement amplification).
 """
 
 from __future__ import annotations
@@ -24,7 +43,7 @@ from repro.core import ClusterBaseline, ClusterClient, ClusterConfig
 from repro.core import HeuristicConfig, LatencyModel, MiningParams
 from repro.core import PalpatineConfig, ShardedDKVStore
 
-from .common import latency_stats, row
+from .common import bench_cli, latency_stats, row, sum_gate
 from .workloads import TPCC, TPCCConfig
 
 
@@ -49,6 +68,56 @@ def palpatine_config(cache_bytes: int = 1 << 20) -> PalpatineConfig:
     )
 
 
+def _p99_us(lats) -> float:
+    return float(np.percentile(np.asarray(lats), 99) * 1e6)
+
+
+def static_sweep(quick: bool = True, results: dict | None = None) -> dict:
+    results = {} if results is None else results
+    shard_counts = (1, 4) if quick else (1, 2, 4, 8)
+    client_counts = (2,) if quick else (2, 4, 8, 16)
+    n_tx = 60 if quick else 250           # per tenant, per stage
+    gen = TPCC(TPCCConfig())
+
+    for n_shards in shard_counts:
+        for n_clients in client_counts:
+            stage2 = tenant_streams(gen, n_clients, n_tx, seed=7)
+
+            store = gen.make_sharded_store(n_shards)
+            base = ClusterBaseline(store, n_clients)
+            base_lats = [l for ls in base.run(stage2) for l in ls]
+            bls = latency_stats(base_lats)
+            name = f"cluster_s{n_shards}_c{n_clients}_baseline"
+            results[f"{name}_p99_us"] = _p99_us(base_lats)
+            row(name, bls["mean_us"], p95_us=bls["p95_us"],
+                p99_us=results[f"{name}_p99_us"])
+
+            store = gen.make_sharded_store(n_shards)
+            cluster = ClusterClient(store, ClusterConfig(
+                n_clients=n_clients, palpatine=palpatine_config()))
+            cluster.run(tenant_streams(gen, n_clients, n_tx, seed=3))
+            cluster.mine_all()
+            cluster.exchange_patterns()
+            cluster.reset_stats()
+            lats = [l for ls in cluster.run(stage2) for l in ls]
+            ls_ = latency_stats(lats)
+            agg = cluster.aggregate_stats()
+            per_shard = {
+                f"shard{j}_hr": s.hit_rate
+                for j, s in enumerate(cluster.per_shard_stats())
+            }
+            name = f"cluster_s{n_shards}_c{n_clients}_palpatine"
+            results[f"{name}_hit"] = agg.hit_rate
+            results[f"{name}_p99_us"] = _p99_us(lats)
+            row(name, ls_["mean_us"], p95_us=ls_["p95_us"],
+                p99_us=results[f"{name}_p99_us"],
+                hit_rate=agg.hit_rate, precision=agg.precision,
+                speedup=bls["mean_us"] / ls_["mean_us"],
+                patterns=len(cluster.exchange.store),
+                col_patterns=len(cluster.exchange.col_store), **per_shard)
+    return results
+
+
 def degraded_latencies(n_shards: int, slow_node: int = 0,
                        factor: float = 10.0, jitter: float = 0.1):
     """One node ``factor``x slow (a compacting / failing region server).
@@ -68,8 +137,9 @@ def degraded_latencies(n_shards: int, slow_node: int = 0,
     return out
 
 
-def degraded_sweep(quick: bool = True):
+def degraded_sweep(quick: bool = True, results: dict | None = None) -> dict:
     """Mean/p99 latency with one 10x-slow replica, R=1 vs R>=2."""
+    results = {} if results is None else results
     n_shards, n_clients = 2, 4
     n_tx = 60 if quick else 150
     gen = TPCC(TPCCConfig())
@@ -92,56 +162,120 @@ def degraded_sweep(quick: bool = True):
                 tenant_streams(gen, n_clients, n_tx, seed=13)) for l in ls]
             ls_ = latency_stats(lats)
             means[label] = ls_["mean_us"]
-            p99s[label] = float(np.percentile(np.asarray(lats), 99) * 1e6)
-            row(f"cluster_degraded_r{repl}_{label}", ls_["mean_us"],
-                p95_us=ls_["p95_us"], p99_us=p99s[label],
-                hit_rate=cluster.aggregate_stats().hit_rate)
+            p99s[label] = _p99_us(lats)
+            hit = cluster.aggregate_stats().hit_rate
+            name = f"cluster_degraded_r{repl}_{label}"
+            results[f"{name}_p99_us"] = p99s[label]
+            results[f"{name}_hit"] = hit
+            row(name, ls_["mean_us"], p95_us=ls_["p95_us"],
+                p99_us=p99s[label], hit_rate=hit)
         row(f"cluster_degraded_r{repl}_ratio",
             means["degraded"] / means["healthy"],
             mean_ratio=means["degraded"] / means["healthy"],
             p99_ratio=p99s["degraded"] / p99s["healthy"])
+    return results
 
 
-def main(quick: bool = True):
-    shard_counts = (1, 4) if quick else (1, 2, 4, 8)
-    client_counts = (2, 6) if quick else (2, 4, 8, 16)
-    n_tx = 100 if quick else 250          # per tenant, per stage
+def elastic_sweep(quick: bool = True, results: dict | None = None) -> dict:
+    """Ring scale-out under load: steady window, the post-scale window
+    right after add_node's targeted invalidations, and the recovery
+    window — the membership subsystem's headline is the recovered hit
+    ratio landing back within ~10% of steady state while only ~1/(N+1)
+    of the resident keys moved."""
+    results = {} if results is None else results
+    n_shards, n_clients = 2, 3
+    n_tx = 50 if quick else 150
     gen = TPCC(TPCCConfig())
+    store = ShardedDKVStore(
+        n_shards, latencies=degraded_latencies(n_shards, factor=1.0),
+        replication=2)
+    store.load(gen.dataset())
+    cluster = ClusterClient(store, ClusterConfig(
+        n_clients=n_clients, palpatine=palpatine_config(),
+        rebalance_every_ops=500))
+    cluster.run(tenant_streams(gen, n_clients, n_tx, seed=21))
+    cluster.mine_all()
+    cluster.exchange_patterns()
 
-    for n_shards in shard_counts:
-        for n_clients in client_counts:
-            stage2 = tenant_streams(gen, n_clients, n_tx, seed=7)
+    def window(name: str, seed: int) -> tuple[float, float]:
+        cluster.reset_stats()
+        lats = [l for ls in cluster.run(
+            tenant_streams(gen, n_clients, n_tx, seed=seed)) for l in ls]
+        hit = cluster.aggregate_stats().hit_rate
+        p99 = _p99_us(lats)
+        results[f"cluster_elastic_{name}_hit"] = hit
+        results[f"cluster_elastic_{name}_p99_us"] = p99
+        row(f"cluster_elastic_{name}", latency_stats(lats)["mean_us"],
+            hit_rate=hit, p99_us=p99)
+        return hit, p99
 
-            store = gen.make_sharded_store(n_shards)
-            base = ClusterBaseline(store, n_clients)
-            base_lats = [l for ls in base.run(stage2) for l in ls]
-            bls = latency_stats(base_lats)
-            row(f"cluster_s{n_shards}_c{n_clients}_baseline",
-                bls["mean_us"], p95_us=bls["p95_us"])
+    steady_hit, _ = window("steady", 23)
+    report = store.add_node(
+        latency=LatencyModel(seed=1009 + n_shards, jitter_sigma=0.1,
+                             stall_frac=0.0),
+        now=store.frontier())
+    window("post_scale", 25)       # invalidation-storm window
+    recovered_hit, _ = window("recovered", 27)
+    recovery = recovered_hit / steady_hit if steady_hit else 0.0
+    results["elastic_recovery_ratio"] = recovery
+    # the ring-math invariant is the *placement* fraction: a joiner claims
+    # ~1/(N+1) of the (key, replica) placements regardless of R (the
+    # unique-key fraction scales with R and would hide amplification)
+    results["elastic_moved_fraction"] = report.placement_fraction
+    row("cluster_elastic_recovery", recovery,
+        recovery_ratio=recovery,
+        placement_fraction=results["elastic_moved_fraction"],
+        key_fraction=report.moved_fraction,
+        keys_streamed=report.keys_streamed,
+        bytes_streamed=report.bytes_streamed)
+    return results
 
-            store = gen.make_sharded_store(n_shards)
-            cluster = ClusterClient(store, ClusterConfig(
-                n_clients=n_clients, palpatine=palpatine_config()))
-            cluster.run(tenant_streams(gen, n_clients, n_tx, seed=3))
-            cluster.mine_all()
-            cluster.exchange_patterns()
-            cluster.reset_stats()
-            lats = [l for ls in cluster.run(stage2) for l in ls]
-            ls_ = latency_stats(lats)
-            agg = cluster.aggregate_stats()
-            per_shard = {
-                f"shard{j}_hr": s.hit_rate
-                for j, s in enumerate(cluster.per_shard_stats())
-            }
-            row(f"cluster_s{n_shards}_c{n_clients}_palpatine",
-                ls_["mean_us"], p95_us=ls_["p95_us"],
-                hit_rate=agg.hit_rate, precision=agg.precision,
-                speedup=bls["mean_us"] / ls_["mean_us"],
-                patterns=len(cluster.exchange.store),
-                col_patterns=len(cluster.exchange.col_store), **per_shard)
 
-    degraded_sweep(quick)
+def main(quick: bool = True, results: dict | None = None) -> dict:
+    results = {} if results is None else results
+    static_sweep(quick, results)
+    elastic_sweep(quick, results)
+    degraded_sweep(quick, results)
+    return results
+
+
+def check(results: dict, committed: dict, max_regression: float) -> list[str]:
+    """Regression gate, built to survive noisy runners (see
+    bench_mining.check for the philosophy).
+
+    * ``*_p99_us`` keys swing individually on shared hardware, so they
+      gate on the *sum* over the keys both runs share.
+    * hit ratios and the elastic recovery ratio are workload-determined
+      (latency jitter barely moves them): each gates individually at
+      committed/max_regression.
+    * the elastic moved-key fraction is ring-determined: it fails when it
+      grows past committed×max_regression (movement amplification means
+      the ring math regressed).
+    """
+    # one sum-gate per sweep family: the degraded-r1 window is an
+    # intentional ~80x outlier that would otherwise dominate a global sum
+    # and let every other window regress unnoticed
+    failures = []
+    for family in ("cluster_s", "cluster_elastic", "cluster_degraded_r1",
+                   "cluster_degraded_r2"):
+        failures.extend(sum_gate(
+            results, committed,
+            lambda k, f=family: k.startswith(f) and k.endswith("_p99_us"),
+            max_regression, f"{family}* p99 us"))
+    for key, old in committed.items():
+        new = results.get(key)
+        if not isinstance(old, (int, float)) or \
+                not isinstance(new, (int, float)):
+            continue
+        if (key.endswith("_hit") or key == "elastic_recovery_ratio") \
+                and old >= 0.05 and new < old / max_regression:
+            failures.append(f"{key}: {new:.3f} < committed {old:.3f} "
+                            f"/ {max_regression}")
+        if key == "elastic_moved_fraction" and new > old * max_regression:
+            failures.append(f"{key}: {new:.3f} > committed {old:.3f} "
+                            f"× {max_regression}")
+    return failures
 
 
 if __name__ == "__main__":
-    main(quick=False)
+    bench_cli(__doc__, main, check)

@@ -19,20 +19,16 @@ that factor smaller) fails the run — the CI perf-smoke gate.
 
 from __future__ import annotations
 
-import argparse
 import dataclasses
-import json
-import sys
 import time
 import tracemalloc
-from pathlib import Path
 
 import numpy as np
 
 from repro.core import ALGORITHMS, MiningParams, SequenceDatabase
 from repro.core.mining import VerticalBitmaps, _dfs_mine, maximal_filter
 
-from .common import row
+from .common import bench_cli, row, sum_gate
 from .workloads import SEQB, SEQBConfig, TPCC, TPCCConfig
 
 
@@ -154,48 +150,11 @@ def check(results: dict, committed: dict, max_regression: float) -> list[str]:
                 f"/ {max_regression}")
     if speed_total and len(speed_bad) == speed_total:
         failures.extend(speed_bad)
-    shared = [k for k, v in committed.items()
-              if k.startswith("mining_") and isinstance(v, (int, float))
-              and isinstance(results.get(k), (int, float))]
-    old_total = sum(committed[k] for k in shared)
-    new_total = sum(results[k] for k in shared)
-    if old_total > 0 and new_total > old_total * max_regression:
-        failures.append(
-            f"total mining time over {len(shared)} keys: {new_total:.1f} ms "
-            f"> committed {old_total:.1f} ms × {max_regression}")
+    failures.extend(sum_gate(results, committed,
+                             lambda k: k.startswith("mining_"),
+                             max_regression, "mining time ms"))
     return failures
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--quick", action="store_true",
-                    help="reduced sweep (CI perf smoke)")
-    ap.add_argument("--out", type=Path, default=None,
-                    help="write results JSON here")
-    ap.add_argument("--check", type=Path, default=None,
-                    help="compare against committed results JSON; non-zero "
-                         "exit on regression")
-    ap.add_argument("--max-regression", type=float, default=2.0)
-    args = ap.parse_args()
-
-    committed = None
-    if args.check is not None:
-        if not args.check.exists():
-            # an explicitly requested gate must never silently disarm
-            print(f"--check: {args.check} not found — refusing to skip the "
-                  f"perf gate", file=sys.stderr)
-            raise SystemExit(1)
-        committed = json.loads(args.check.read_text())
-    results = main(quick=args.quick)
-    if args.out is not None:
-        args.out.write_text(json.dumps(results, indent=2, sort_keys=True)
-                            + "\n")
-    if committed is not None:
-        failures = check(results, committed, args.max_regression)
-        if failures:
-            print("PERF REGRESSION:", file=sys.stderr)
-            for f in failures:
-                print(f"  {f}", file=sys.stderr)
-            raise SystemExit(1)
-        print(f"perf check OK ({len(committed)} committed numbers, "
-              f"max regression {args.max_regression}x)")
+    bench_cli(__doc__, main, check)

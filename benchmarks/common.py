@@ -1,14 +1,24 @@
 """Shared benchmark reporting helpers.
 
 Every benchmark prints ``name,us_per_call,derived`` CSV rows; ``derived``
-packs the figure-specific values as ``k=v|k=v`` pairs.
+packs the figure-specific values as ``k=v|k=v`` pairs.  Gated benchmarks
+(`bench_mining`, `bench_cluster`) share the ``bench_cli`` entry point
+(--quick/--out/--check/--max-regression with the refuse-to-disarm guard)
+and the noise-robust ``sum_gate`` for absolute timing keys.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Callable
+
 import numpy as np
 
-__all__ = ["latency_stats", "throughput_stats", "row"]
+__all__ = ["latency_stats", "throughput_stats", "row", "sum_gate",
+           "bench_cli"]
 
 
 def latency_stats(lats) -> dict:
@@ -45,3 +55,61 @@ def row(name: str, us_per_call: float, **derived) -> str:
     line = f"{name},{us_per_call:.3f},{packed}"
     print(line, flush=True)
     return line
+
+
+def sum_gate(results: dict, committed: dict,
+             key_filter: Callable[[str], bool], max_regression: float,
+             label: str) -> list[str]:
+    """Noise-robust gate for absolute metrics: individual keys swing on
+    shared hardware, so the gate is on the *sum* over the keys both runs
+    share — a real regression moves the total; one noisy sample does not."""
+    shared = [k for k, v in committed.items()
+              if key_filter(k) and isinstance(v, (int, float))
+              and isinstance(results.get(k), (int, float))]
+    old_total = sum(committed[k] for k in shared)
+    new_total = sum(results[k] for k in shared)
+    if old_total > 0 and new_total > old_total * max_regression:
+        return [f"total {label} over {len(shared)} keys: {new_total:.1f} "
+                f"> committed {old_total:.1f} × {max_regression}"]
+    return []
+
+
+def bench_cli(description: str,
+              main: Callable[..., dict],
+              check: Callable[[dict, dict, float], list[str]]) -> None:
+    """Shared gated-benchmark entry point: run ``main(quick=...)``, write
+    ``--out``, and compare against ``--check`` committed numbers (the CI
+    perf-smoke contract — one implementation so the two gates can never
+    drift)."""
+    ap = argparse.ArgumentParser(description=description)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep (CI perf smoke)")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="write results JSON here")
+    ap.add_argument("--check", type=Path, default=None,
+                    help="compare against committed results JSON; non-zero "
+                         "exit on regression")
+    ap.add_argument("--max-regression", type=float, default=2.0)
+    args = ap.parse_args()
+
+    committed = None
+    if args.check is not None:
+        if not args.check.exists():
+            # an explicitly requested gate must never silently disarm
+            print(f"--check: {args.check} not found — refusing to skip the "
+                  f"perf gate", file=sys.stderr)
+            raise SystemExit(1)
+        committed = json.loads(args.check.read_text())
+    results = main(quick=args.quick)
+    if args.out is not None:
+        args.out.write_text(json.dumps(results, indent=2, sort_keys=True)
+                            + "\n")
+    if committed is not None:
+        failures = check(results, committed, args.max_regression)
+        if failures:
+            print("PERF REGRESSION:", file=sys.stderr)
+            for f in failures:
+                print(f"  {f}", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"perf check OK ({len(committed)} committed numbers, "
+              f"max regression {args.max_regression}x)")

@@ -8,7 +8,14 @@ round, the cold tenant prefetches along sequences it has *never observed* —
 the paper's metastore (§3.2) scaled out across clients.  The finale kills a
 storage node outright: every key stays readable from its surviving replica,
 and a scatter-gather batch read overlaps its in-flight fetches across the
-remaining nodes.  Run:
+remaining nodes.
+
+The membership walkthrough then exercises the elastic ring: a fifth node
+joins under load (only its owed key ranges stream over, ~1/(N+1) of the
+placements; caches take targeted invalidations, not a flush), and a node
+crashes while writes land — hinted handoffs queue for it and drain on
+rejoin, with read-repair as the backstop, converging every replica to
+byte-identical state.  Run:
 
     PYTHONPATH=src python examples/cluster_quickstart.py
 """
@@ -88,6 +95,38 @@ def main():
           f"replicas in {batch_lat*1e6:.0f} us; the same dozen cold reads "
           f"issued one-by-one take {serial*1e6:.0f} us")
     store.set_down(0, False)
+
+    # -- scale out: a fifth node joins under load -------------------------
+    report = store.add_node(now=store.frontier())
+    frac = report.placement_fraction
+    print(f"scale-out: node 4 joined, {report.keys_streamed} keys "
+          f"({report.bytes_streamed / 1e3:.0f} KB) streamed in "
+          f"{(report.done_at - report.started_at) * 1e3:.1f} virtual ms — "
+          f"{frac:.0%} of placements moved (~1/(N+1) = "
+          f"{1 / store.n_shards:.0%}), zero keys lost")
+    print("containers per node after the move:",
+          [len(s.data) for s in store.shards])
+    # tenants kept serving: their caches grew a partition and dropped only
+    # the remapped keys (targeted invalidation, not a flush)
+    v, lat = warm0.read(("users", "u3", "profile"))
+    assert v is not None
+    print(f"tenant cache now spans {len(warm0.cache.spaces)} partitions; "
+          f"post-scale read: {lat*1e6:.1f} us")
+
+    # -- crash + rejoin: hinted handoff converges the stragglers ----------
+    key = ("users", "u7", "feed")
+    crashed = store.replicas_of(key)[0]
+    store.set_down(crashed)
+    warm1.clock.sync(store.frontier())
+    warm1.write(key, b"fresh-feed-for-u7")
+    print(f"node {crashed} crashed; write landed on the surviving replica, "
+          f"{store.hints.pending(crashed)} hinted handoff queued")
+    replayed = store.set_down(crashed, False)      # rejoin: hints drain
+    copies = {store.shards[s].data[key] for s in store.replicas_of(key)}
+    assert copies == {b"fresh-feed-for-u7"}
+    print(f"rejoin: {replayed} hint replayed on the write channel — all "
+          f"replicas byte-identical (read-repair would catch lost hints: "
+          f"{store.read_repairs} repairs so far)")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,12 @@ from .cluster import (
     ShardedTwoSpaceCache,
 )
 from .heuristics import HEURISTICS, HeuristicConfig, PrefetchEngine
+from .membership import (
+    BudgetRebalancer,
+    HintedHandoffLog,
+    MembershipEvent,
+    MoveReport,
+)
 from .metastore import PatternMetastore
 from .mining import (
     ALGORITHMS,
@@ -34,8 +40,10 @@ from .sessions import AccessLogger, Container, SequenceDatabase
 
 __all__ = [
     "AccessLogger", "ALGORITHMS", "BITMAP_ALGOS", "BaselineClient",
+    "BudgetRebalancer",
     "CacheStats", "Channel",
-    "Clock", "RPCFuture",
+    "Clock", "HintedHandoffLog", "MembershipEvent", "MoveReport",
+    "RPCFuture",
     "ClusterBaseline", "ClusterClient", "ClusterConfig", "Container",
     "HEURISTICS", "HeuristicConfig", "LatencyModel",
     "MiningParams", "Pattern", "PatternExchange", "PatternMetastore",

@@ -164,6 +164,12 @@ class SimulatedDKVStore:
                  demand_width: int = DEMAND_WIDTH):
         self.latency = latency or LatencyModel()
         self.data: dict[Any, bytes] = {}
+        #: per-key monotone write version, stamped by a replicating
+        #: front-end (ShardedDKVStore's put frontier).  Replicas whose
+        #: version for a key trails the newest are *stale* — the signal
+        #: read-repair and hinted-handoff draining converge on.  A
+        #: standalone node never populates it (absent == version 0).
+        self.versions: dict[Any, int] = {}
         self.demand = Channel(demand_width)     # foreground RPC pipeline
         self.background = Channel(1)   # prefetch channel
         self.write_channel = Channel(1)  # write-behind channel (WAL path)

@@ -90,12 +90,31 @@ class LRUSpace:
             return True
         return False
 
+    def resize(self, capacity_bytes: int) -> list:
+        """Change the byte budget in place (cluster budget rebalancing).
+        Shrinking evicts LRU-first down to the new capacity; returns the
+        evicted keys."""
+        self.capacity = int(capacity_bytes)
+        evicted = []
+        while self.used > self.capacity:
+            k, e = self.od.popitem(last=False)
+            self.used -= e.size
+            evicted.append(k)
+        return evicted
+
 
 class TwoSpaceCache:
     def __init__(self, main_bytes: int, preemptive_frac: float = 0.10):
+        self.preemptive_frac = float(preemptive_frac)
         self.main = LRUSpace(main_bytes)
         self.preemptive = LRUSpace(int(main_bytes * preemptive_frac))
         self.stats = CacheStats()
+
+    def resize(self, main_bytes: int) -> None:
+        """Re-budget both spaces, keeping the preemptive fraction; overflow
+        evicts LRU-first (the rebalancer shrinks cold partitions live)."""
+        self.main.resize(main_bytes)
+        self.preemptive.resize(int(main_bytes * self.preemptive_frac))
 
     # -- reads ---------------------------------------------------------
     def lookup(self, key, now: float = 0.0):

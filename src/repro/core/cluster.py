@@ -30,12 +30,21 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-import hashlib
 import heapq
 from typing import Callable, Iterable, Optional, Sequence
 
 from .backstore import LatencyModel, RPCFuture, SimulatedDKVStore
 from .cache import CacheStats, TwoSpaceCache
+from .membership import (
+    BudgetRebalancer,
+    HintedHandoffLog,
+    MembershipEvent,
+    MoveReport,
+    _hash64,
+    add_node as _membership_add_node,
+    build_ring,
+    remove_node as _membership_remove_node,
+)
 from .metastore import PatternMetastore
 from .mining import Pattern
 from .palpatine import BaselineClient, PalpatineClient, PalpatineConfig
@@ -50,13 +59,6 @@ __all__ = [
     "ClusterBaseline",
     "sum_stats",
 ]
-
-
-def _hash64(x) -> int:
-    """Stable 64-bit hash of a container key (process-independent, unlike
-    builtin ``hash`` which is salted per process)."""
-    return int.from_bytes(
-        hashlib.blake2b(repr(x).encode(), digest_size=8).digest(), "big")
 
 
 def sum_stats(stats: Iterable[CacheStats]) -> CacheStats:
@@ -85,17 +87,28 @@ class ShardedDKVStore:
 
     Read semantics are read-one-of-R by default: each demand read routes to
     the replica with the lowest estimated completion time (demand-channel
-    backlog + EWMA service), so one degraded node only slows the keys that
-    have no other live replica.  ``read_quorum`` > 1 issues to every live
-    replica and completes at the q-th fastest.  Writes are write-all: every
-    live replica applies the write on its own write-behind channel and the
-    logical write completes when the slowest replica acks.
+    backlog + EWMA service) among the replicas holding the key's *newest
+    version*, so one degraded node only slows the keys that have no other
+    live replica and a stale rejoiner is never served from.  ``read_quorum``
+    > 1 issues to every live replica and completes at the q-th fastest.
+    Writes stamp a monotone per-key version (the put frontier) on every
+    live replica; ``write_mode='all'`` completes at the slowest replica
+    ack, ``write_mode='quorum'`` at the majority ack (all live replicas
+    still apply).  Down replicas receive *hinted handoffs*, drained on
+    ``set_down(shard, False)``; reads that observe version divergence
+    perform *read-repair* — together they converge a recovered node to
+    byte-identical state (see :mod:`repro.core.membership`).
+
+    The ring is elastic: :meth:`add_node` / :meth:`remove_node` recompute
+    preference lists and stream only the owed key ranges (copy-then-prune,
+    virtual-clock-costed), while reads keep being served.
     """
 
     def __init__(self, n_shards: int = 4,
                  latencies: Optional[Sequence[LatencyModel]] = None,
                  vnodes: int = 64, replication: int = 1,
-                 read_quorum: int = 1):
+                 read_quorum: int = 1, write_mode: str = "all",
+                 read_repair: bool = True):
         if latencies is None:
             latencies = [LatencyModel(seed=1009 + i) for i in range(n_shards)]
         if len(latencies) != n_shards:
@@ -104,17 +117,38 @@ class ShardedDKVStore:
         self.replication = max(1, min(int(replication), self.n_shards))
         if not 1 <= int(read_quorum) <= self.replication:
             raise ValueError("read_quorum must be in [1, replication]")
+        if write_mode not in ("all", "quorum"):
+            raise ValueError("write_mode must be 'all' or 'quorum'")
         self.read_quorum = int(read_quorum)
+        self.write_mode = write_mode
+        self.read_repair = bool(read_repair)
         self.shards = [SimulatedDKVStore(l) for l in latencies]
         self.down: set[int] = set()
-        ring = []
-        for s in range(self.n_shards):
-            for v in range(vnodes):
-                ring.append((_hash64(f"shard{s}:vnode{v}"), s))
-        ring.sort()
-        self._points = [p for p, _ in ring]
-        self._owners = [s for _, s in ring]
+        self.removed: set[int] = set()
+        self.vnodes = int(vnodes)
+        self.hints = HintedHandoffLog()
+        self.read_repairs = 0
+        self._write_version = 0
+        self._watchers: list[Callable] = []
+        self._membership_watchers: list[Callable] = []
+        self._points, self._owners = build_ring(
+            range(self.n_shards), self.vnodes)
         self._replica_cache: dict = {}
+        #: (points, owners, cache) of the incoming ring while a membership
+        #: change streams its ranges: writes apply to the union of old and
+        #: pending owners (Cassandra's pending-range writes), so an acked
+        #: mid-move write can never be destroyed by the post-cutover prune
+        self._pending_ring: Optional[tuple] = None
+        #: keys written during the streaming window — the cutover sweeps
+        #: their old-ring-only copies (keys absent from the pre-move
+        #: resident snapshot would otherwise leak orphans on non-owners)
+        self._pending_writes: set = set()
+
+    @property
+    def write_quorum(self) -> int:
+        """Acks a quorum write completes at: a replica majority (W), so
+        W + R > N holds whenever read_quorum is also a majority."""
+        return self.replication // 2 + 1
 
     # -- placement ---------------------------------------------------------
     def shard_of(self, key) -> int:
@@ -124,29 +158,78 @@ class ShardedDKVStore:
     def replicas_of(self, key) -> tuple[int, ...]:
         """The key's preference list: R distinct nodes walking the ring
         clockwise from its point (primary first)."""
+        return self._ring_replicas(key, self._points, self._owners,
+                                   self._replica_cache)
+
+    def _ring_replicas(self, key, points, owners_ring, cache
+                       ) -> tuple[int, ...]:
         h = _hash64(key)
-        cached = self._replica_cache.get(h)
+        cached = cache.get(h)
         if cached is not None:
             return cached
-        i = bisect.bisect_right(self._points, h) % len(self._points)
+        i = bisect.bisect_right(points, h) % len(points)
         owners: list[int] = []
-        for step in range(len(self._owners)):
-            s = self._owners[(i + step) % len(self._owners)]
+        for step in range(len(owners_ring)):
+            s = owners_ring[(i + step) % len(owners_ring)]
             if s not in owners:
                 owners.append(s)
                 if len(owners) == self.replication:
                     break
         reps = tuple(owners)
-        self._replica_cache[h] = reps
+        cache[h] = reps
         return reps
 
-    def set_down(self, shard: int, down: bool = True) -> None:
+    def _write_targets(self, key) -> list[int]:
+        """Nodes a write must reach: the installed preference list, plus —
+        while a membership change is streaming — the pending ring's owners
+        of the key, so the post-cutover prune can never destroy an acked
+        mid-move write."""
+        targets = list(self.replicas_of(key))
+        if self._pending_ring is not None:
+            pts, own, cch = self._pending_ring
+            for s in self._ring_replicas(key, pts, own, cch):
+                if s not in targets:
+                    targets.append(s)
+        return targets
+
+    def set_down(self, shard: int, down: bool = True,
+                 now: Optional[float] = None) -> int:
         """Mark a node failed/recovered.  Reads route around down replicas;
-        writes skip them (re-sync on recovery is out of scope here)."""
+        writes leave them *hinted handoffs*.  Recovery (``down=False``)
+        drains the node's hints on its write channel (anti-entropy re-sync)
+        and returns the number of replayed writes."""
         if down:
             self.down.add(shard)
-        else:
-            self.down.discard(shard)
+            return 0
+        self.down.discard(shard)
+        return self._drain_hints(shard, now)
+
+    def _drain_hints(self, shard: int, now: Optional[float] = None) -> int:
+        """Replay the recovered node's hinted handoffs on its write channel.
+        Keys the node already holds at an equal-or-newer version (a
+        read-repair won the race) are skipped.  No watcher storm: each
+        hinted write already fired the cluster's coherence watchers from
+        its live replicas at write time."""
+        pending = self.hints.take(shard)
+        if not pending:
+            return 0
+        node = self.shards[shard]
+        t = self.frontier() if now is None else float(now)
+        replayed = 0
+        for k in sorted(pending, key=repr):
+            value, ver = pending[k]
+            if shard not in self.replicas_of(k):
+                continue   # a ring change re-homed the key while the node
+                           # was down: replaying would re-materialize a
+                           # copy its new owners already hold
+            if k in node.data and ver <= node.versions.get(k, 0):
+                continue   # a read-repair already converged this key
+            node.data[k] = value
+            node.versions[k] = ver
+            node.write_channel.issue(t, node.latency.put(1, len(value)))
+            replayed += 1
+        self.hints.replayed += replayed
+        return replayed
 
     def _live_replicas(self, key) -> list[int]:
         reps = [s for s in self.replicas_of(key) if s not in self.down]
@@ -154,11 +237,49 @@ class ShardedDKVStore:
             raise KeyError(f"all replicas of {key!r} are down")
         return reps
 
+    def _repair(self, key, stale: Sequence[int], value, ver: int,
+                now: float) -> None:
+        """Read-repair: overwrite stale replicas from a fresh peer, costed
+        on each stale node's write channel.  Watchers stay quiet — the
+        repaired value is the one clients already observe through the
+        fresh replicas."""
+        if value is None:
+            return
+        for s in stale:
+            node = self.shards[s]
+            node.data[key] = value
+            node.versions[key] = ver
+            node.write_channel.issue(now, node.latency.put(1, len(value)))
+            self.read_repairs += 1
+
+    def _fresh_replicas(self, key, now: float) -> list[int]:
+        """Live replicas holding the key's newest version (the version
+        probe is metadata, latency-free like :meth:`contains`).  Observed
+        divergence — a replica that rejoined before its hints landed —
+        triggers read-repair when enabled, so a single read converges the
+        key across its preference list."""
+        reps = self._live_replicas(key)
+        if len(reps) == 1:
+            return reps
+        # a replica that does not hold the key at all is staler than any
+        # holder (version -1 < 0): a rejoiner owed a version-0 range copy
+        # whose hints were lost gets re-replicated by read-repair too
+        vers = [self.shards[s].versions.get(key, 0)
+                if key in self.shards[s].data else -1 for s in reps]
+        vmax = max(vers)
+        if min(vers) == vmax:
+            return reps
+        fresh = [s for s, v in zip(reps, vers) if v == vmax]
+        if self.read_repair:
+            self._repair(key, [s for s, v in zip(reps, vers) if v < vmax],
+                         self.shards[fresh[0]].data.get(key), vmax, now)
+        return fresh
+
     def _route(self, key, now: float) -> int:
-        """Read-one-of-R: the live replica with the lowest estimated
+        """Read-one-of-R: the fresh live replica with the lowest estimated
         completion time — demand-channel queueing delay plus the node's
         EWMA per-item service (how slow it has been lately)."""
-        reps = self._live_replicas(key)
+        reps = self._fresh_replicas(key, now)
         if len(reps) == 1:
             return reps[0]
         return min(reps, key=lambda s: (
@@ -176,7 +297,7 @@ class ShardedDKVStore:
         by_shard: dict[int, list[int]] = {}
         pending: dict[int, int] = {}
         for pos, k in enumerate(keys):
-            reps = self._live_replicas(k)
+            reps = self._fresh_replicas(k, now)
             if len(reps) == 1:
                 s = reps[0]
             else:
@@ -205,19 +326,27 @@ class ShardedDKVStore:
     def get_async(self, key, now: float) -> RPCFuture:
         """Futures-based demand read with replica-aware routing.  With a
         read quorum, issue to every live replica and complete at the q-th
-        fastest ack (read amplification buys tail-latency insurance)."""
+        fastest ack (read amplification buys tail-latency insurance); the
+        value always comes from a replica holding the newest version, so
+        W + R > N reads are never stale."""
         if self.read_quorum <= 1:
             node = self._route(key, now)
             fut = self.shards[node].get_async(key, now)
             fut.node = node
             return fut
+        fresh = set(self._fresh_replicas(key, now))
         reps = self._live_replicas(key)
-        futs = [self.shards[s].get_async(key, now) for s in reps]
+        futs = {s: self.shards[s].get_async(key, now) for s in reps}
         q = min(self.read_quorum, len(futs))
-        done = sorted(f.done_at for f in futs)[q - 1]
-        fastest = min(range(len(futs)), key=lambda i: futs[i].done_at)
-        return RPCFuture((key,), futs[fastest].values, now, done,
-                         done_each=[done], node=reps[fastest])
+        best = min(fresh, key=lambda s: futs[s].done_at)
+        # complete at the q-th fastest ack, but never before the replica
+        # that supplied the value acks: when only a slow rejoiner holds
+        # the newest version, the fresh read costs that replica's latency
+        # (the degraded-window tail this subsystem is measured on)
+        done = max(sorted(f.done_at for f in futs.values())[q - 1],
+                   futs[best].done_at)
+        return RPCFuture((key,), futs[best].values, now, done,
+                         done_each=[done], node=best)
 
     def multi_get_async(self, keys: Sequence, now: float) -> RPCFuture:
         """Scatter-gather demand read: one pipelined sub-batch RPC per
@@ -229,21 +358,30 @@ class ShardedDKVStore:
         vals: list = [None] * len(keys)
         if self.read_quorum <= 1:
             plan = self._group(keys, now)
+            fresh_of: Optional[list[set]] = None
         else:
             plan = {}
+            fresh_of = [set(self._fresh_replicas(k, now)) for k in keys]
             for pos, k in enumerate(keys):
                 for s in self._live_replicas(k):
                     plan.setdefault(s, []).append(pos)
         done_lists: list[list[float]] = [[] for _ in keys]
+        fresh_done: list[list[float]] = [[] for _ in keys]
         for shard, positions in plan.items():
             fut = self.shards[shard].multi_get_async(
                 [keys[p] for p in positions], now)
             for p, v in zip(positions, fut.values):
-                vals[p] = v
+                if fresh_of is None or shard in fresh_of[p]:
+                    vals[p] = v
+                    fresh_done[p].append(fut.done_at)
                 done_lists[p].append(fut.done_at)
         q = self.read_quorum
-        done_each = [sorted(ds)[min(q, len(ds)) - 1] if ds else now
-                     for ds in done_lists]
+        # per key: q-th fastest ack, floored at the earliest *fresh*
+        # sub-batch ack (the value cannot land before a holder of the
+        # newest version has responded)
+        done_each = [max(sorted(ds)[min(q, len(ds)) - 1],
+                         min(fd, default=now)) if ds else now
+                     for ds, fd in zip(done_lists, fresh_done)]
         worst = max(done_each, default=now)
         return RPCFuture(tuple(keys), vals, now, worst, done_each=done_each)
 
@@ -265,7 +403,7 @@ class ShardedDKVStore:
         when *every* node's background channel is saturated (per-node
         shedding happens inside :meth:`background_multi_get`)."""
         return min(s.backlog(now) for i, s in enumerate(self.shards)
-                   if i not in self.down)
+                   if i not in self.down and i not in self.removed)
 
     def background_multi_get(
         self, keys: Sequence, now: float, backlog_cap: Optional[float] = None
@@ -280,7 +418,7 @@ class ShardedDKVStore:
         by_shard: dict[int, list[int]] = {}
         pending: dict[int, int] = {}
         for pos, k in enumerate(keys):
-            reps = self._live_replicas(k)
+            reps = self._fresh_replicas(k, now)
             if len(reps) == 1:
                 s = reps[0]
             else:
@@ -301,17 +439,77 @@ class ShardedDKVStore:
         return vals, done
 
     def put(self, key, value: bytes, now: float) -> float:
-        """Write-all: every live replica applies the write on its own
-        write-behind channel; the logical write completes when the slowest
-        replica acks (keeps replicas coherent, including their write
-        monitors, at the cost of write-tail exposure)."""
-        return max(self.shards[s].put(key, value, now)
-                   for s in self._live_replicas(key))
+        """Replicated write, stamped with the next monotone version (the
+        put frontier).  Every *live* replica applies it on its own
+        write-behind channel; down replicas get hinted handoffs.  The
+        logical write completes at the slowest live ack (``write_mode
+        ='all'``) or the W-th fastest where W is a replica majority
+        (``write_mode='quorum'`` — bounded write-tail exposure, and with a
+        majority read quorum W + R > N guarantees non-stale reads)."""
+        targets = self._write_targets(key)
+        live_pref = [s for s in self.replicas_of(key) if s not in self.down]
+        # unavailability checks come BEFORE any state mutates: a failed
+        # write must leave no applied copy and no hint behind (a phantom
+        # would materialize a write the caller was told never happened)
+        if not live_pref:
+            raise KeyError(f"all replicas of {key!r} are down")
+        if self.write_mode == "quorum" and len(live_pref) < self.write_quorum:
+            raise KeyError(
+                f"quorum write to {key!r} unavailable: {len(live_pref)} "
+                f"live replicas < W={self.write_quorum}")
+        self._write_version += 1
+        ver = self._write_version
+        pref = set(self.replicas_of(key))
+        acks = []
+        pref_acks = []
+        for s in targets:
+            if s in self.down:
+                self.hints.add(s, key, value, ver)
+            else:
+                done = self.shards[s].put(key, value, now)
+                self.shards[s].versions[key] = ver
+                acks.append(done)
+                if s in pref:
+                    pref_acks.append(done)
+        if self._pending_ring is not None:
+            self._pending_writes.add(key)
+        if self.write_mode == "quorum":
+            # W counts preference-list acks only: a fast pending-ring
+            # owner (mid-move) must not stand in for a replica majority
+            pref_acks.sort()
+            return pref_acks[min(self.write_quorum, len(pref_acks)) - 1]
+        return max(acks)
+
+    # -- membership (elastic ring; see repro.core.membership) --------------
+    def add_node(self, latency: Optional[LatencyModel] = None,
+                 now: float = 0.0,
+                 on_batch: Optional[Callable[[float], None]] = None
+                 ) -> MoveReport:
+        """Grow the ring by one node: stream only the owed key ranges to
+        it (copy-then-prune, channel-costed) and fire targeted membership
+        invalidations.  Returns the streamed-range accounting."""
+        node = SimulatedDKVStore(
+            latency or LatencyModel(seed=1009 + len(self.shards)))
+        return _membership_add_node(self, node, now, on_batch)
+
+    def remove_node(self, shard: int, now: float = 0.0,
+                    on_batch: Optional[Callable[[float], None]] = None
+                    ) -> MoveReport:
+        """Decommission a node (live or crashed); its ranges stream to the
+        new successor sets from whichever replicas survive."""
+        return _membership_remove_node(self, shard, now, on_batch)
+
+    def watch_membership(self, callback: Callable) -> None:
+        """Register a ring-change watcher; called with a MembershipEvent
+        after every add/remove completes (clients use it for targeted
+        cache invalidation of the remapped keys)."""
+        self._membership_watchers.append(callback)
 
     # -- coherence ---------------------------------------------------------
     def watch(self, callback: Callable) -> None:
         """Each node runs its own write monitor; a cluster watcher hears
-        writes from all of them."""
+        writes from all of them (including nodes that join later)."""
+        self._watchers.append(callback)
         for s in self.shards:
             s.watch(callback)
 
@@ -349,12 +547,14 @@ class ShardedTwoSpaceCache:
                  preemptive_frac: float,
                  key_of: Callable[[int], object],
                  shard_of: Callable[[object], int]):
+        self.preemptive_frac = float(preemptive_frac)
         per_shard = int(total_bytes) // max(1, int(n_shards))
         self.spaces = [TwoSpaceCache(per_shard, preemptive_frac)
                        for _ in range(n_shards)]
         self.key_of = key_of
         self.shard_of = shard_of
-        self._placement: dict = {}   # iid -> space (ids never change shard)
+        self.dead: set[int] = set()  # partitions of removed ring nodes
+        self._placement: dict = {}   # iid -> space (rehomed on ring changes)
 
     def _space(self, iid) -> TwoSpaceCache:
         space = self._placement.get(iid)
@@ -362,6 +562,66 @@ class ShardedTwoSpaceCache:
             space = self.spaces[self.shard_of(self.key_of(iid))]
             self._placement[iid] = space
         return space
+
+    # -- budget coordination (membership.BudgetRebalancer) ----------------
+    def budgets(self) -> list[int]:
+        """Current main-space byte budget per partition."""
+        return [sp.main.capacity for sp in self.spaces]
+
+    def set_budgets(self, mains: Sequence[int]) -> None:
+        """Re-split the byte budget across partitions; shrunk partitions
+        evict LRU-first immediately."""
+        if len(mains) != len(self.spaces):
+            raise ValueError("need one budget per partition")
+        for sp, b in zip(self.spaces, mains):
+            sp.resize(int(b))
+
+    def add_shard(self) -> None:
+        """A node joined the ring: carve an equal share out of every *live*
+        partition for the newcomer (dead partitions of removed nodes hold
+        no budget and must not dilute the split), conserving the total
+        byte budget; the rebalancer then adapts shares to traffic."""
+        live = [sp for i, sp in enumerate(self.spaces)
+                if i not in self.dead]
+        m = len(live)
+        total = sum(self.budgets())
+        for sp in live:
+            sp.resize(sp.main.capacity * m // (m + 1))
+        self.spaces.append(
+            TwoSpaceCache(total - sum(self.budgets()), self.preemptive_frac))
+
+    def drop_shard(self, shard: int) -> None:
+        """A node left the ring: fold the dead partition's byte budget back
+        into the live partitions (its entries were already rehomed to new
+        primaries) so no budget is stranded.  The partition object stays in
+        place — space indices mirror store node ids — but at zero capacity
+        it can never admit again."""
+        self.dead.add(shard)
+        dead = self.spaces[shard]
+        budget = dead.main.capacity
+        dead.resize(0)
+        live = [i for i, sp in enumerate(self.spaces)
+                if i not in self.dead and sp.main.capacity > 0]
+        if budget <= 0 or not live:
+            return
+        share = budget // len(live)
+        for j, i in enumerate(live):
+            self.spaces[i].resize(self.spaces[i].main.capacity + share
+                                  + (budget - share * len(live)
+                                     if j == 0 else 0))
+
+    def rehome(self, iids: Iterable[int]) -> int:
+        """Targeted invalidation after a ring change: drop only the
+        remapped items' entries and partition placement (the next access
+        re-places them on their new primary's partition); every other
+        entry keeps its cache state — no full flush."""
+        n = 0
+        for iid in iids:
+            space = self._placement.pop(iid, None)
+            if space is not None:
+                space.invalidate(iid)
+                n += 1
+        return n
 
     # -- TwoSpaceCache surface --------------------------------------------
     def lookup(self, key, now: float = 0.0):
@@ -547,6 +807,9 @@ class ClusterConfig:
     exchange_every_ops: Optional[int] = 2_000   # gossip period (cluster ops)
     exchange_capacity: int = 10_000
     think_time: float = 1e-3             # virtual gap between sessions
+    # eviction coordination: re-split each tenant's cache budget across
+    # shards by observed traffic skew every N cluster ops (None = never)
+    rebalance_every_ops: Optional[int] = None
 
 
 class ClusterClient:
@@ -567,12 +830,43 @@ class ClusterClient:
         factory = None
         if self.cfg.shard_caches:
             def factory(client: PalpatineClient) -> ShardedTwoSpaceCache:
-                return ShardedTwoSpaceCache(
+                cache = ShardedTwoSpaceCache(
                     store.n_shards, pcfg.cache_bytes, pcfg.preemptive_frac,
                     key_of=client.logger.db.item, shard_of=store.shard_of)
+                # a client joining after node removals must not strand
+                # budget on partitions no key can map to: retire them
+                # up front (their shares fold into the live partitions)
+                for s in sorted(getattr(store, "removed", ())):
+                    cache.drop_shard(s)
+                return cache
         self.tenants = [PalpatineClient(store, pcfg, cache_factory=factory)
                         for _ in range(self.cfg.n_clients)]
+        self.rebalancers = ([BudgetRebalancer() for _ in self.tenants]
+                            if self.cfg.shard_caches else [])
+        if hasattr(store, "watch_membership"):
+            store.watch_membership(self._on_membership)
         self.total_ops = 0
+
+    # -- membership --------------------------------------------------------
+    def _on_membership(self, event: MembershipEvent) -> None:
+        """Ring change landed: grow every tenant's per-shard cache for a
+        joining node, then fire targeted invalidations for exactly the
+        remapped keys (no full flush — unmoved entries keep serving)."""
+        for t in self.tenants:
+            if event.kind == "add" and hasattr(t.cache, "add_shard"):
+                t.cache.add_shard()
+            t.on_keys_remapped(event.remapped_keys)
+            if event.kind == "remove" and hasattr(t.cache, "drop_shard"):
+                # after the rehome: the dead partition is empty, fold its
+                # budget back into the live ones
+                t.cache.drop_shard(event.node)
+
+    def rebalance_budgets(self) -> int:
+        """One eviction-coordination round: re-split each tenant's cache
+        budget across shards by its observed per-shard traffic skew.
+        Returns the number of tenants whose partitions were resized."""
+        return sum(int(r.rebalance(t.cache))
+                   for r, t in zip(self.rebalancers, self.tenants))
 
     # -- driving -----------------------------------------------------------
     def run(self, streams: Sequence[Iterable], collect_values: bool = False):
@@ -587,6 +881,9 @@ class ClusterClient:
             every = self.cfg.exchange_every_ops
             if every and self.total_ops % every == 0:
                 self.exchange_patterns()
+            revery = self.cfg.rebalance_every_ops
+            if revery and self.total_ops % revery == 0:
+                self.rebalance_budgets()
 
         lats, vals = _interleave(self.tenants, streams, self.cfg.think_time,
                                  on_op, collect_values)

@@ -1,0 +1,445 @@
+"""Elastic membership & anti-entropy for the sharded DKV cluster.
+
+Palpatine's evaluation assumes a fixed cluster, but its target back stores
+(Cassandra/HBase-class DKVs) live on rings that grow, shrink, and recover.
+Every topology change is a cache-invalidation and replica-divergence storm
+the prefetcher must survive; this module is the scale-and-recovery layer:
+
+* **Ring scaling** — :func:`add_node` / :func:`remove_node` recompute the
+  consistent-hash ring and stream *only the owed key ranges* to the new
+  successor sets.  Movement is virtual-clock-costed through the existing
+  :class:`~repro.core.backstore.Channel` RPC layer (source background
+  channel for the range read, destination write channel for the bulk
+  apply), and ordering is copy-then-prune: a key is deleted from a node
+  that no longer serves it only after every new holder's copy has landed,
+  so demand reads keep succeeding at every instant of the move.  Clients
+  hear a :class:`MembershipEvent` naming exactly the keys whose primary
+  changed — a *targeted* cache invalidation instead of a full flush.
+
+* **Hinted handoff** — :class:`HintedHandoffLog` buffers writes owed to a
+  down replica (latest version per key); ``set_down(shard, False)`` drains
+  them on the recovered node's write channel, so a rejoining node converges
+  without waiting for reads to touch every stale key.
+
+* **Read-repair** — the store's read paths compare per-key monotone write
+  versions across live replicas (the ``put`` frontier); a replica that
+  rejoined before its hints landed (or whose hints were lost) is
+  overwritten from a fresh peer the first time the key is read.  Hinted
+  handoff + read-repair together converge a recovered node to
+  byte-identical state.
+
+* **Eviction coordination** — :class:`BudgetRebalancer` periodically
+  reallocates a tenant's per-shard cache budget proportional to observed
+  per-shard traffic/hit-mass skew, with an EMA + hysteresis band so noisy
+  windows don't thrash partition sizes.
+
+MITHRIL (Yang et al., PAPERS.md) shows prefetch-layer benefit evaporates
+when cache budgets are misallocated across skewed partitions, and the
+microsecond-latency KV-store study (Mita et al.) shows tail latency is
+dominated by degraded/recovering-node windows — exactly the two regimes
+this subsystem closes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Iterable, Optional, Sequence
+
+__all__ = [
+    "MoveReport",
+    "MembershipEvent",
+    "HintedHandoffLog",
+    "BudgetRebalancer",
+    "build_ring",
+    "add_node",
+    "remove_node",
+]
+
+#: keys per streamed range batch (one background-channel read + one bulk
+#: write-channel apply per batch)
+STREAM_BATCH = 64
+
+
+def _hash64(x) -> int:
+    """Stable 64-bit hash of a container key (process-independent, unlike
+    builtin ``hash`` which is salted per process)."""
+    return int.from_bytes(
+        hashlib.blake2b(repr(x).encode(), digest_size=8).digest(), "big")
+
+
+def build_ring(node_ids: Iterable[int], vnodes: int) -> tuple[list, list]:
+    """The consistent-hash ring for a node set: sorted virtual-node points
+    plus their owners.  Vnode identities depend only on the node id, so a
+    ring grown one node at a time is identical to one built at full size —
+    which is what bounds movement to the joining node's owed ranges."""
+    ring = []
+    for s in node_ids:
+        for v in range(vnodes):
+            ring.append((_hash64(f"shard{s}:vnode{v}"), s))
+    ring.sort()
+    return [p for p, _ in ring], [s for _, s in ring]
+
+
+@dataclasses.dataclass
+class MoveReport:
+    """Streamed-range accounting for one membership change."""
+
+    kind: str                  # "add" | "remove"
+    node: int
+    resident_keys: int         # unique keys resident before the change
+    keys_streamed: int         # unique keys copied to >= 1 new holder
+    placements_gained: int     # (key, node) copies created
+    placements_dropped: int    # (key, node) copies pruned after the move
+    bytes_streamed: int
+    lost_keys: int             # keys with no live source to stream from
+    hinted_placements: int     # owed copies deferred to hinted handoff
+                               # (destination was down during the move)
+    replication: int
+    started_at: float
+    done_at: float             # when the last range batch landed
+
+    @property
+    def moved_fraction(self) -> float:
+        """Fraction of resident keys that had to move — the elasticity
+        headline: ~1/(N+1) for a node joining an N-node ring at R=1."""
+        return (self.keys_streamed / self.resident_keys
+                if self.resident_keys else 0.0)
+
+    @property
+    def placement_fraction(self) -> float:
+        """Fraction of (key, replica) placements that moved — the
+        replication-independent ring-math invariant (~1/(N+1) for a
+        joiner, regardless of R)."""
+        total = self.replication * self.resident_keys
+        return self.placements_gained / total if total else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipEvent:
+    """Broadcast to cluster clients after a ring change lands.
+
+    ``remapped_keys`` are exactly the keys whose *primary* moved — the set
+    a per-shard client cache must re-place (targeted invalidation; keys
+    with unchanged primaries keep their cache entries untouched)."""
+
+    kind: str
+    node: int
+    remapped_keys: tuple
+    report: MoveReport
+
+
+# ---------------------------------------------------------------------------
+# Hinted handoff
+# ---------------------------------------------------------------------------
+
+
+class HintedHandoffLog:
+    """Write buffer for down replicas (Dynamo-style hinted handoff).
+
+    A write whose preference list includes a down node leaves a *hint*
+    (key, value, version) addressed to it; only the latest version per key
+    is kept.  Draining replays the hints on the recovered node's write
+    channel, skipping keys the node already holds at an equal-or-newer
+    version (a concurrent read-repair may have won the race)."""
+
+    def __init__(self) -> None:
+        self._hints: dict[int, dict] = {}   # node -> {key: (value, version)}
+        self.enqueued = 0
+        self.replayed = 0
+
+    def add(self, node: int, key, value: bytes, version: int) -> None:
+        slot = self._hints.setdefault(node, {})
+        old = slot.get(key)
+        if old is None or version > old[1]:
+            slot[key] = (value, version)
+        self.enqueued += 1
+
+    def pending(self, node: int) -> int:
+        return len(self._hints.get(node, ()))
+
+    def take(self, node: int) -> dict:
+        """Pop and return every hint addressed to ``node``."""
+        return self._hints.pop(node, {})
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self._hints.values())
+
+
+# ---------------------------------------------------------------------------
+# Ring scaling: add / remove node with owed-range streaming
+# ---------------------------------------------------------------------------
+
+
+def _rebuild_ring(store) -> None:
+    ids = [i for i in range(len(store.shards)) if i not in store.removed]
+    if not ids:
+        raise ValueError("cannot remove the last ring node")
+    store._points, store._owners = build_ring(ids, store.vnodes)
+    store._replica_cache = {}   # fresh dict: stale rings may keep theirs
+
+
+def _stream_ranges(store, moves: dict, now: float,
+                   on_batch: Optional[Callable[[float], None]] = None
+                   ) -> tuple[int, float]:
+    """Copy the owed ranges, one (source, destination) pair at a time.
+
+    Each batch is one range read on the source's *background* channel (bulk
+    moves never contend with demand reads) followed by one bulk apply on
+    the destination's write channel, entering service when the read lands.
+    Returns ``(bytes_streamed, done_at)``.  ``on_batch(landed_at)`` fires
+    after each batch's copy is applied — mid-move, with the ring already
+    recomputed and pruning still pending — which is where the elasticity
+    tests probe that reads keep being served."""
+    total_bytes = 0
+    done_at = now
+    for (src, dst) in sorted(moves):
+        keys = moves[(src, dst)]
+        src_node, dst_node = store.shards[src], store.shards[dst]
+        for i in range(0, len(keys), STREAM_BATCH):
+            batch = keys[i:i + STREAM_BATCH]
+            vals, read_done = src_node.background_get(batch, now)
+            nbytes = sum(len(v) for v in vals if v is not None)
+            landed = dst_node.write_channel.issue(
+                read_done, dst_node.latency.put(len(batch), nbytes))
+            for k, v in zip(batch, vals):
+                if v is None:
+                    continue
+                dst_node.data[k] = v
+                dst_node.versions[k] = src_node.versions.get(k, 0)
+            total_bytes += nbytes
+            done_at = max(done_at, landed)
+            if on_batch is not None:
+                on_batch(landed)
+    return total_bytes, done_at
+
+
+def _relocate(store, kind: str, node: int, now: float,
+              on_batch: Optional[Callable[[float], None]] = None
+              ) -> MoveReport:
+    """Recompute the ring and stream only the owed ranges.
+
+    Ordering is copy-then-cutover-then-prune: the *old* routing table stays
+    installed while the owed ranges stream (old owners hold every key, so
+    reads keep being served mid-move); the new ring goes live only once the
+    last batch lands, and only then are stale copies pruned."""
+    # the leaving node's data still counts as resident (it is the source of
+    # its owed ranges while live); already-removed nodes never do
+    skip = store.removed - ({node} if kind == "remove" else set())
+    resident: set = set()
+    for i, s in enumerate(store.shards):
+        if i not in skip:
+            resident.update(s.data.keys())
+    ordered = sorted(resident, key=repr)   # deterministic stream order
+    old_reps = {k: store.replicas_of(k) for k in ordered}
+
+    # compute the new placement, then swap the old ring back in for the
+    # duration of the transfer (clients route by it until cutover)
+    old_ring = (store._points, store._owners, store._replica_cache)
+    _rebuild_ring(store)
+    new_ring = (store._points, store._owners, store._replica_cache)
+
+    moves: dict[tuple[int, int], list] = {}
+    prune: dict[int, list] = {}
+    remapped: list = []
+    streamed: set = set()
+    gained_n = lost_keys = hinted_n = 0
+    for k in ordered:
+        old = old_reps[k]
+        new = store.replicas_of(k)
+        if new[0] != old[0]:
+            remapped.append(k)
+        gained = [d for d in new if d not in old]
+        if gained:
+            sources = [s for s in old
+                       if s not in store.down and s not in skip]
+            if not sources:
+                lost_keys += 1
+            else:
+                src = sources[0]   # primary-preferred (preference order)
+                for d in gained:
+                    if d in store.down:
+                        # a crashed node cannot receive a range transfer:
+                        # defer its owed copy to hinted handoff, the same
+                        # anti-entropy path ordinary writes use (it lands
+                        # on the node's write channel at drain time)
+                        store.hints.add(d, k, store.shards[src].data[k],
+                                        store.shards[src].versions.get(k, 0))
+                        hinted_n += 1
+                    else:
+                        moves.setdefault((src, d), []).append(k)
+                        gained_n += 1
+                        streamed.add(k)
+        for d in old:
+            if d not in new:
+                prune.setdefault(d, []).append(k)
+
+    store._points, store._owners, store._replica_cache = old_ring
+    store._pending_ring = new_ring     # mid-move writes reach new owners too
+    try:
+        bytes_streamed, done_at = _stream_ranges(store, moves, now, on_batch)
+    finally:
+        store._pending_ring = None
+    store._points, store._owners, store._replica_cache = new_ring  # cutover
+
+    dropped = 0
+    for d, keys in prune.items():
+        shard = store.shards[d]
+        for k in keys:
+            if shard.data.pop(k, None) is not None:
+                dropped += 1
+            shard.versions.pop(k, None)
+    # keys first written mid-move were dual-written to old- and new-ring
+    # owners; they are absent from the resident snapshot above, so sweep
+    # their non-owner copies explicitly or they leak forever — and they
+    # must join the remapped set, or a tenant cache keeps their placement
+    # pinned to the old-ring (possibly soon-dead) partition
+    late_writes = sorted(store._pending_writes, key=repr)
+    store._pending_writes = set()
+    seen_remapped = set(remapped)
+    for k in late_writes:
+        owners = set(store.replicas_of(k))
+        for i, shard in enumerate(store.shards):
+            if i not in owners and shard.data.pop(k, None) is not None:
+                shard.versions.pop(k, None)
+                dropped += 1
+        if k not in seen_remapped:
+            remapped.append(k)
+
+    report = MoveReport(kind, node, len(resident), len(streamed), gained_n,
+                        dropped, bytes_streamed, lost_keys, hinted_n,
+                        store.replication, now, done_at)
+    event = MembershipEvent(kind, node, tuple(remapped), report)
+    for cb in store._membership_watchers:
+        cb(event)
+    return report
+
+
+def add_node(store, node_store, now: float = 0.0,
+             on_batch: Optional[Callable[[float], None]] = None
+             ) -> MoveReport:
+    """Join ``node_store`` to ``store``'s ring.
+
+    The new node claims its virtual nodes, the owed key ranges stream in
+    from their current primaries, and stale copies are pruned only after
+    the copies land.  The cluster serves reads throughout."""
+    nid = len(store.shards)
+    store.shards.append(node_store)
+    store.n_shards = len(store.shards)
+    for cb in store._watchers:          # coherence monitor covers the joiner
+        node_store.watch(cb)
+    return _relocate(store, "add", nid, now, on_batch)
+
+
+def remove_node(store, shard: int, now: float = 0.0,
+                on_batch: Optional[Callable[[float], None]] = None
+                ) -> MoveReport:
+    """Decommission node ``shard`` (live: it streams its own ranges out;
+    down/crashed: surviving replicas stream on its behalf).  Pending hints
+    addressed to it are discarded — it will never rejoin."""
+    if shard in store.removed or not 0 <= shard < len(store.shards):
+        raise ValueError(f"node {shard} is not in the ring")
+    if len(store.shards) - len(store.removed) <= 1:
+        # validate BEFORE mutating: a rejected removal must leave the
+        # store untouched (removed-set and pending hints included)
+        raise ValueError("cannot remove the last ring node")
+    store.removed.add(shard)
+    store.hints.take(shard)
+    report = _relocate(store, "remove", shard, now, on_batch)
+    # a mid-move write can re-enqueue hints to the leaving node (it is
+    # still in the old ring during streaming); it will never rejoin, so
+    # discard them again or they linger forever
+    store.hints.take(shard)
+    store.down.discard(shard)
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Eviction coordination: per-shard cache-budget rebalancing
+# ---------------------------------------------------------------------------
+
+
+class BudgetRebalancer:
+    """Reallocate one tenant's cache budget across shard partitions by
+    observed traffic skew.
+
+    Each round reads the per-shard cache stats, takes the *delta* since the
+    previous round (so old traffic ages out), EMA-smooths the per-shard
+    weight — accesses plus hits, i.e. traffic mass boosted by hit mass —
+    and resizes partitions toward the smoothed shares.  Two guards prevent
+    thrash: a ``min_share`` floor keeps cold shards warm enough to observe
+    a shift back, and the resize only applies when some partition's target
+    moved by more than ``hysteresis`` of the total budget."""
+
+    def __init__(self, min_share: float = 0.05, hysteresis: float = 0.10,
+                 smoothing: float = 0.5):
+        if not 0.0 <= min_share < 1.0:
+            raise ValueError("min_share must be in [0, 1)")
+        self.min_share = float(min_share)
+        self.hysteresis = float(hysteresis)
+        self.smoothing = float(smoothing)
+        self._ema: list[float] = []
+        self._prev: list[tuple[int, int]] = []   # (accesses, hits) per shard
+        self.rounds = 0
+        self.applied = 0
+
+    def _shares(self, weights: Sequence[float]) -> list[float]:
+        total = sum(weights)
+        n = len(weights)
+        if total <= 0:
+            return [1.0 / n] * n
+        shares = [w / total for w in weights]
+        # clamp to the floor, renormalize the remainder over the rest
+        floor = min(self.min_share, 1.0 / n)
+        excess = sum(max(0.0, s - floor) for s in shares)
+        budgetable = 1.0 - floor * n
+        return [floor + (max(0.0, s - floor) / excess) * budgetable
+                if excess > 0 else 1.0 / n
+                for s in shares]
+
+    def rebalance(self, cache) -> bool:
+        """One round against a ``ShardedTwoSpaceCache``; True if resized."""
+        stats = cache.per_shard_stats()
+        n = len(stats)
+        while len(self._prev) < n:          # ring grew since last round
+            self._prev.append((0, 0))
+        while len(self._ema) < n:
+            self._ema.append(0.0)
+        counters = [(s.accesses, s.hits) for s in stats]
+        deltas = [max(0, a - pa) + max(0, h - ph)
+                  for (a, h), (pa, ph) in zip(counters, self._prev)]
+        self._prev = counters
+        self.rounds += 1
+        if sum(deltas) == 0:
+            return False
+        current = cache.budgets()
+        total = sum(current)
+        if total <= 0:
+            return False
+        # a dead partition (its node left the ring — the cache flags it
+        # explicitly, so a stats-delta window spanning pre-removal traffic
+        # cannot masquerade as liveness) gets no share: the min_share
+        # floor must not resurrect it
+        dead = getattr(cache, "dead", ())
+        live = [i for i in range(n)
+                if i not in dead and (current[i] > 0 or deltas[i] > 0)]
+        if not live:
+            return False
+        live_shares = self._shares([deltas[i] for i in live])
+        shares = [0.0] * n
+        for i, s in zip(live, live_shares):
+            shares[i] = s
+        a = self.smoothing
+        self._ema = [a * s + (1 - a) * e if e > 0 and s > 0 else s
+                     for s, e in zip(shares, self._ema)]
+        norm = sum(self._ema)
+        target = [total * e / norm for e in self._ema]
+        if max(abs(t - c) for t, c in zip(target, current)) < \
+                self.hysteresis * total:
+            return False
+        # integer split conserving the total byte budget exactly
+        mains = [int(t) for t in target]
+        mains[mains.index(max(mains))] += total - sum(mains)
+        cache.set_budgets(mains)
+        self.applied += 1
+        return True

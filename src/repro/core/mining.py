@@ -250,7 +250,10 @@ class VerticalBitmaps:
 
 
 def _frontier_support(
-    slots: np.ndarray, cand: np.ndarray, params: MiningParams
+    slots: np.ndarray,
+    cand: np.ndarray,
+    params: MiningParams,
+    allowed: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Fused support count for a whole frontier: (P,S,W) × (K,S,W) -> (P,K).
 
@@ -260,6 +263,13 @@ def _frontier_support(
     ``P×K×S×W`` work at low minsup).  Chunked so the transient stays under
     ``params.frontier_budget`` bytes.  ``use_kernel=True`` routes the dense
     join through the Pallas ``frontier_join_support`` kernel instead.
+
+    ``allowed`` is an optional (P,K) bool mask of candidate extensions per
+    prefix (apriori narrowing for maxgap=None: a child's frequent
+    extensions are a subset of its parent's).  The numpy path joins only
+    the column union of the mask — items no prefix still allows drop out
+    of the whole level — and disallowed pairs report support 0; the kernel
+    path computes the dense join and masks after.
     """
     p_prefixes, n_sessions, n_words = slots.shape
     k_items = cand.shape[0]
@@ -268,22 +278,40 @@ def _frontier_support(
     if params.use_kernel:
         from repro.kernels.bitmap_support import ops as _ops
 
-        return np.asarray(_ops.frontier_join_support(slots, cand)).astype(np.int64)
+        sup = np.asarray(_ops.frontier_join_support(slots, cand)).astype(np.int64)
+        if allowed is not None:
+            sup[~allowed] = 0
+        return sup
 
+    cols = None
+    cand_cols = cand
+    if allowed is not None:
+        cols = np.nonzero(allowed.any(axis=0))[0]
+        if cols.size == k_items:
+            cols = None
+        else:
+            cand_cols = cand[cols]
+    k_cols = cand_cols.shape[0]
     sup = np.zeros((p_prefixes, k_items), np.int64)
     pnz, snz = np.nonzero(slots.any(axis=-1))
-    if pnz.size == 0:
+    if pnz.size == 0 or k_cols == 0:
         return sup
-    cand_t = np.ascontiguousarray(cand.transpose(1, 0, 2))  # (S, K, W)
-    chunk = max(1, int(params.frontier_budget) // (k_items * n_words * 4))
+    cand_t = np.ascontiguousarray(cand_cols.transpose(1, 0, 2))  # (S, Kc, W)
+    chunk = max(1, int(params.frontier_budget) // (k_cols * n_words * 4))
+    sup_view = sup if cols is None else np.zeros(
+        (p_prefixes, k_cols), np.int64)
     for i in range(0, pnz.size, chunk):
         p_i, s_i = pnz[i : i + chunk], snz[i : i + chunk]
         sl = slots[p_i, s_i]                                 # (c, W)
-        hit = ((sl[:, None, :] & cand_t[s_i]) != 0).any(-1)  # (c, K)
+        hit = ((sl[:, None, :] & cand_t[s_i]) != 0).any(-1)  # (c, Kc)
         # pnz is sorted, so equal-prefix entries form contiguous runs:
         # segment-reduce instead of scatter-add
         uniq, starts = np.unique(p_i, return_index=True)
-        sup[uniq] += np.add.reduceat(hit.astype(np.int64), starts, axis=0)
+        sup_view[uniq] += np.add.reduceat(hit.astype(np.int64), starts, axis=0)
+    if cols is not None:
+        sup[:, cols] = sup_view
+    if allowed is not None:
+        sup[~allowed] = 0
     return sup
 
 
@@ -375,6 +403,16 @@ def _frontier_mine(
     patterns: list[tuple] = [(int(it),) for it in cand_items]
     fbits = cand                              # depth-1 frontier = item bitmaps
     fsups = vb.freq_support[rows].astype(np.int64)
+    # per-branch candidate narrowing: for unconstrained gap a child's
+    # frequent extensions are a subset of its parent's (dropping the last
+    # prefix item keeps any occurrence a subsequence), so each frontier
+    # entry only joins against its parent's surviving extension set.  The
+    # containment argument needs gap-free subsequence semantics — a
+    # contiguous (maxgap-constrained) occurrence of the child need not
+    # contain one of the parent+item — so the gap rule gates it and
+    # contiguous walks keep the full candidate set.
+    narrow = params.maxgap is None
+    allowed: Optional[np.ndarray] = None      # (P, K) mask; None = all
     depth = 1
     while patterns:
         if depth >= params.max_len:
@@ -387,7 +425,7 @@ def _frontier_mine(
         # extension slots for the whole frontier, once per level (reused
         # across every support chunk below)
         slots = vb.extension_slots(fbits, params.maxgap)
-        sup = _frontier_support(slots, cand, params)       # (P, K)
+        sup = _frontier_support(slots, cand, params, allowed=allowed)  # (P, K)
         surv = sup >= msc
         has_ext = surv.any(axis=1)                         # maximality mask
         if depth >= params.min_len:
@@ -403,6 +441,9 @@ def _frontier_mine(
         patterns = [
             patterns[p] + (int(cand_items[k]),) for p, k in zip(pidx, kidx)
         ]
+        if narrow:
+            # child (p, k) inherits p's surviving extension row
+            allowed = surv[pidx]
         depth += 1
     return out
 

@@ -407,6 +407,19 @@ class PalpatineClient:
     def _store_key_by_id(self, iid: int):
         return self.logger.db.item(iid)
 
+    def on_keys_remapped(self, keys: Sequence) -> None:
+        """Cluster membership change: these container keys moved to a new
+        primary node.  A per-shard cache must drop their (now misfiled)
+        entries and partition placement — a *targeted* invalidation, not a
+        full flush.  Plain caches keep everything: the values themselves
+        did not change, only their placement."""
+        rehome = getattr(self.cache, "rehome", None)
+        if rehome is None:
+            return
+        vocab = self.logger.db._vocab
+        rehome([iid for k in keys
+                if (iid := vocab.get(k)) is not None])
+
     def _on_store_write(self, key) -> None:
         """Coherence: the store-side monitor notifies on writes.  Our own
         writes update the cache in place; external writers invalidate."""

@@ -17,6 +17,7 @@ Node probabilities:
 from __future__ import annotations
 
 import heapq
+from collections import deque
 from typing import Iterable, Iterator, Optional
 
 from .mining import Pattern
@@ -37,9 +38,9 @@ class PNode:
         self.parent = parent
 
     def level_order(self) -> Iterator["PNode"]:
-        queue = [self]
+        queue = deque((self,))
         while queue:
-            node = queue.pop(0)
+            node = queue.popleft()
             yield node
             queue.extend(node.children.values())
 

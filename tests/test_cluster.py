@@ -506,6 +506,80 @@ def test_sharded_cache_stats_setter_only_supports_reset():
     assert tenant.cache.stats.accesses == 0
 
 
+def test_exchange_merge_at_exact_capacity_keeps_top_ranked():
+    """Publishing past the metastore capacity must keep exactly
+    ``capacity`` patterns, ranked by length × support — the gossip
+    steady-state for a busy cluster."""
+    from repro.core import Pattern
+
+    cap = 8
+    ex = PatternExchange(capacity=cap)
+    pats = [Pattern((("t", f"a{i}", "c"), ("t", f"b{i}", "c")), i + 1)
+            for i in range(2 * cap)]
+    ex.store.merge(pats)
+    assert len(ex.store) == cap
+    kept = {p.support for p in ex.store}
+    assert kept == set(range(cap + 1, 2 * cap + 1))   # top supports survive
+    # merging at exact capacity with a better pattern still displaces
+    ex.store.merge([Pattern(tuple(("t", f"x{j}", "c") for j in range(3)),
+                            10_000)])
+    assert len(ex.store) == cap
+    assert max(p.support for p in ex.store) == 10_000
+
+
+def test_exchange_pull_at_capacity_bounds_subscriber_metastore():
+    cap = 6
+    cluster = ClusterClient(make_store(2), ClusterConfig(
+        n_clients=2, exchange_every_ops=None, exchange_capacity=cap,
+        palpatine=small_palpatine()))
+    warm, cold = cluster.tenants
+    cluster.run([stream(1, n_sessions=150), []])
+    cluster.mine_all()
+    assert len(warm.metastore) > cap      # more mined than the wire carries
+    cluster.exchange_patterns()
+    assert len(cluster.exchange.store) <= cap
+    # the cold subscriber received at most the exchange's capacity
+    assert 0 < len(cold.metastore) <= cap
+
+
+def test_exchange_drops_overlong_patterns_on_merge():
+    """A peer advertising patterns longer than max_pattern_len must not
+    grow the exchange (truncation guard — a malicious/misconfigured tenant
+    cannot blow the gossip wire format)."""
+    from repro.core import Pattern
+
+    ex = PatternExchange(capacity=100, max_pattern_len=4)
+    long_pat = Pattern(tuple(("t", f"r{i}", "c") for i in range(5)), 50)
+    ok_pat = Pattern(tuple(("t", f"r{i}", "c") for i in range(4)), 3)
+    ex.store.merge([long_pat, ok_pat])
+    assert len(ex.store) == 1
+    assert next(iter(ex.store)).items == ok_pat.items
+    # same guard on the column store
+    ex.col_store.merge([long_pat])
+    assert len(ex.col_store) == 0
+
+
+def test_pull_merge_forces_remine_for_pulling_tenant_only():
+    """A gossip *pull* that merges foreign patterns bumps the subscriber's
+    metastore generation, so the next ``mine_all(skip_unchanged=True)``
+    must re-run its lattice walk — while a tenant that saw nothing new
+    keeps its skip."""
+    cluster = ClusterClient(make_store(2), ClusterConfig(
+        n_clients=2, exchange_every_ops=None, palpatine=small_palpatine()))
+    warm, idle = cluster.tenants
+    cluster.run([stream(1, n_sessions=150), []])
+    cluster.mine_all()
+    runs_warm, runs_idle = warm.mining_runs, idle.mining_runs
+    # one-sided gossip: only the warm tenant publishes, only idle pulls
+    cluster.exchange.publish(warm)
+    assert cluster.exchange.pull(idle) > 0
+    assert not idle.backlog_unchanged_since_mine()
+    assert warm.backlog_unchanged_since_mine()
+    cluster.mine_all(skip_unchanged=True)
+    assert idle.mining_runs == runs_idle + 1     # merge forced the walk
+    assert warm.mining_runs == runs_warm         # untouched tenant skipped
+
+
 def test_exchange_merge_keeps_max_support():
     ex = PatternExchange(capacity=100)
     from repro.core import Pattern

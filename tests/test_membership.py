@@ -1,0 +1,804 @@
+"""Elastic membership & anti-entropy: ring scaling with bounded key
+movement, reads served throughout a move, hinted handoff + read-repair
+convergence, write-quorum consistency (W+R>N never stale), and eviction
+rebalancing (BudgetRebalancer + per-tenant cache budget coordination)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BudgetRebalancer,
+    ClusterClient,
+    ClusterConfig,
+    HeuristicConfig,
+    LatencyModel,
+    MiningParams,
+    PalpatineConfig,
+    ShardedDKVStore,
+    ShardedTwoSpaceCache,
+)
+
+pytestmark = pytest.mark.tier1
+
+N_KEYS = 400
+VALUE_PAD = 64
+
+
+def flat_latency(i: int) -> LatencyModel:
+    return LatencyModel(jitter_sigma=0.0, stall_frac=0.0, seed=i)
+
+
+def value_of(key) -> bytes:
+    return ("val:" + "/".join(map(str, key))).encode().ljust(VALUE_PAD, b".")
+
+
+def all_keys(n=N_KEYS):
+    return [("t", f"r{i}", "c") for i in range(n)]
+
+
+def make_store(n_shards, **kw):
+    store = ShardedDKVStore(
+        n_shards, latencies=[flat_latency(i) for i in range(n_shards)], **kw)
+    store.load((k, value_of(k)) for k in all_keys())
+    return store
+
+
+def small_palpatine(cache_bytes=8 * 1024):
+    return PalpatineConfig(
+        heuristic=HeuristicConfig("fetch_progressive"),
+        cache_bytes=cache_bytes,
+        preemptive_frac=0.25,
+        mining=MiningParams(minsup=0.02, min_len=3, max_len=10, maxgap=1),
+    )
+
+
+PLANTED = tuple(
+    tuple(np.random.default_rng(s).choice(N_KEYS, size=5, replace=False))
+    for s in range(10)
+)
+
+
+def stream(seed, n_sessions=120, p_pattern=0.8):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_sessions):
+        if rng.random() < p_pattern:
+            base = PLANTED[int(rng.integers(0, len(PLANTED)))]
+        else:
+            base = rng.integers(0, N_KEYS, size=5)
+        out.append([("t", f"r{int(i)}", "c") for i in base])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Ring scaling: bounded movement, availability during the move
+# ---------------------------------------------------------------------------
+
+
+def test_add_node_moves_about_one_over_n_plus_one():
+    """Joining an N-node ring claims ~1/(N+1) of the key placements; with
+    R=1 that is exactly the unique-key moved fraction."""
+    n = 4
+    store = make_store(n, replication=1)
+    report = store.add_node(latency=flat_latency(n), now=0.0)
+    expect = 1.0 / (n + 1)
+    assert report.kind == "add" and report.node == n
+    assert report.resident_keys == N_KEYS
+    assert 0 < report.moved_fraction < 1.6 * expect
+    assert report.keys_streamed == report.placements_gained  # R=1
+    assert report.placements_dropped == report.placements_gained
+    assert report.lost_keys == 0
+    assert report.bytes_streamed >= report.keys_streamed * VALUE_PAD
+    assert report.done_at > report.started_at  # channel-costed, not free
+
+
+def test_add_node_replicated_placement_fraction_bounded():
+    n, r = 4, 2
+    store = make_store(n, replication=r)
+    report = store.add_node(latency=flat_latency(n), now=0.0)
+    placements = r * N_KEYS
+    assert 0 < report.placements_gained / placements < 1.6 / (n + 1)
+    # every key keeps exactly R distinct live copies
+    for k in all_keys():
+        reps = store.replicas_of(k)
+        assert len(set(reps)) == r
+        for s in reps:
+            assert store.shards[s].data[k] == value_of(k)
+
+
+def test_grown_ring_matches_fresh_ring_placement():
+    """A ring grown one node at a time is identical to one built at full
+    size — movement is exactly the joiner's owed ranges, nothing else."""
+    store = make_store(3, replication=2)
+    store.add_node(latency=flat_latency(3), now=0.0)
+    store.add_node(latency=flat_latency(4), now=0.0)
+    fresh = ShardedDKVStore(
+        5, latencies=[flat_latency(i) for i in range(5)], replication=2)
+    for k in all_keys():
+        assert store.replicas_of(k) == fresh.replicas_of(k)
+
+
+def test_reads_served_throughout_the_move():
+    """Copy-then-prune: at every streamed batch boundary (mid-move, ring
+    already recomputed, pruning pending) every key must still resolve to
+    its correct value."""
+    store = make_store(3, replication=1)
+    probes = all_keys()[::37]
+    seen = []
+
+    def on_batch(landed_at):
+        for k in probes:
+            v, _ = store.get(k)
+            assert v == value_of(k)
+        seen.append(landed_at)
+
+    report = store.add_node(latency=flat_latency(3), now=0.0,
+                            on_batch=on_batch)
+    assert len(seen) > 1                  # the move really was incremental
+    assert seen == sorted(seen)
+    assert report.keys_streamed > 0
+    for k in all_keys():
+        assert store.get(k)[0] == value_of(k)
+
+
+def test_mid_move_writes_survive_the_cutover():
+    """Writes acked during the transfer window reach the pending owners
+    too (Cassandra's pending-range writes), so the post-cutover prune can
+    never destroy them — whether the key's batch streamed before or after
+    the write."""
+    store = make_store(2, replication=1)
+    written: dict = {}
+    fired = []
+
+    def on_batch(t):
+        if fired:
+            return
+        fired.append(t)
+        for i, k in enumerate(all_keys()[:80]):
+            v = f"mid-move-{i}".encode().ljust(VALUE_PAD, b"!")
+            store.put(k, v, now=t)
+            written[k] = v
+
+    store.add_node(latency=flat_latency(2), now=0.0, on_batch=on_batch)
+    assert fired and written
+    for k, v in written.items():
+        assert store.get(k)[0] == v            # acked value survived
+        (owner,) = store.replicas_of(k)
+        assert store.shards[owner].data[k] == v
+    # no stray extra copies either: dual-written old owners were pruned
+    for k in written:
+        holders = [s for s in range(store.n_shards)
+                   if k in store.shards[s].data]
+        assert holders == [store.shard_of(k)]
+
+
+def test_remove_node_decommission_streams_out_and_serves():
+    store = make_store(4, replication=2)
+    held = sum(1 for k in all_keys() if 3 in store.replicas_of(k))
+    report = store.remove_node(3, now=0.0)
+    assert report.kind == "remove"
+    assert not store.shards[3].data          # fully drained
+    assert report.keys_streamed == held      # only its owed ranges moved
+    assert report.lost_keys == 0
+    for k in all_keys():
+        reps = store.replicas_of(k)
+        assert 3 not in reps and len(set(reps)) == 2
+        assert store.get(k)[0] == value_of(k)
+
+
+def test_remove_crashed_node_recovers_from_replicas():
+    """A crashed node can be decommissioned: surviving replicas stream its
+    ranges to the new successors."""
+    store = make_store(4, replication=2)
+    store.set_down(2)
+    report = store.remove_node(2, now=0.0)
+    assert report.lost_keys == 0
+    for k in all_keys():
+        assert store.get(k)[0] == value_of(k)
+    # the crashed node never served as a source or destination
+    assert not store.shards[2].data
+
+
+def test_remove_last_node_is_rejected_without_side_effects():
+    store = make_store(2, replication=1)
+    store.remove_node(0, now=0.0)
+    k = all_keys()[0]
+    store.set_down(1)
+    store.hints.add(1, k, b"pending", 1)   # a hint that must survive
+    store.set_down(1, False, now=0.0)
+    store.set_down(1)
+    store.hints.add(1, k, b"pending", 2)
+    with pytest.raises(ValueError):
+        store.remove_node(1, now=0.0)
+    # the rejected removal left the store untouched and functional
+    assert store.removed == {0}
+    assert store.hints.pending(1) == 1
+    store.set_down(1, False, now=0.0)
+    assert store.get(k)[0] == b"pending"
+    assert store.backlog(0.0) >= 0.0
+    with pytest.raises(ValueError):
+        store.remove_node(0, now=0.0)     # already removed
+
+
+def test_failed_write_leaves_no_phantom_hint():
+    """put() with every replica down must raise AND leave no hint — a
+    phantom hint would materialize a write the caller was told failed."""
+    store = make_store(2, replication=1)
+    k = all_keys()[0]
+    owner = store.shard_of(k)
+    store.set_down(owner)
+    with pytest.raises(KeyError):
+        store.put(k, b"never-happened", now=0.0)
+    assert store.hints.pending(owner) == 0
+    store.set_down(owner, False, now=0.0)
+    assert store.get(k)[0] == value_of(k)   # original value, not the ghost
+
+
+def test_ring_change_defers_down_destination_to_hints():
+    """A crashed node cannot receive a range transfer: its owed copies go
+    through hinted handoff and land on rejoin (or via read-repair if the
+    hints are lost) — never by writing directly into a down node."""
+    store = make_store(4, replication=2)
+    store.set_down(1)
+    before = dict(store.shards[1].data)
+    report = store.remove_node(3, now=0.0)
+    assert store.shards[1].data == before      # untouched while down
+    owed = [k for k in all_keys()
+            if 1 in store.replicas_of(k) and k not in before]
+    assert report.hinted_placements == len(owed) > 0
+    assert store.hints.pending(1) == len(owed)
+    store.set_down(1, False, now=1.0)          # drain converges the owed keys
+    for k in owed:
+        assert store.shards[1].data[k] == value_of(k)
+
+
+def test_lost_range_hints_recovered_by_read_repair():
+    store = make_store(4, replication=2)
+    store.set_down(1)
+    held = set(store.shards[1].data)
+    store.remove_node(3, now=0.0)
+    owed = [k for k in all_keys()
+            if 1 in store.replicas_of(k) and k not in held]
+    assert owed
+    store.hints.take(1)                        # lose the range hints
+    store.set_down(1, False, now=1.0)
+    for k in owed:
+        assert store.get(k)[0] == value_of(k)  # never None / stale
+    assert store.read_repairs >= len(owed)     # re-replicated on read
+    for k in owed:
+        assert store.shards[1].data[k] == value_of(k)
+
+
+# ---------------------------------------------------------------------------
+# Hinted handoff + read-repair: recovery converges byte-identically
+# ---------------------------------------------------------------------------
+
+
+def _key_on(store, shard):
+    return next(k for k in all_keys() if shard in store.replicas_of(k))
+
+
+def test_hinted_handoff_drains_on_recovery():
+    store = make_store(3, replication=2)
+    down = 1
+    written = [k for k in all_keys() if down in store.replicas_of(k)][:20]
+    store.set_down(down)
+    for i, k in enumerate(written):
+        store.put(k, f"new-{i}".encode() * 8, now=1.0)
+    assert store.hints.pending(down) == len(written)
+    frontier_before = store.shards[down].frontier()
+    replayed = store.set_down(down, False, now=2.0)
+    assert replayed == len(written)
+    assert store.hints.pending(down) == 0
+    # the recovered node converged byte-identically with its peers, and
+    # paid for the replay on its write channel
+    for i, k in enumerate(written):
+        for s in store.replicas_of(k):
+            assert store.shards[s].data[k] == f"new-{i}".encode() * 8
+    assert store.shards[down].frontier() > frontier_before
+
+
+def test_hint_keeps_only_latest_version_per_key():
+    store = make_store(3, replication=2)
+    down = 0
+    k = _key_on(store, down)
+    store.set_down(down)
+    for i in range(5):
+        store.put(k, f"v{i}".encode() * 8, now=1.0)
+    assert store.hints.pending(down) == 1      # latest-version dedup
+    store.set_down(down, False, now=2.0)
+    assert store.shards[down].data[k] == b"v4" * 8
+
+
+def test_read_repair_converges_lost_hint_divergence():
+    """A replica that rejoins after its hints were lost is caught by
+    read-repair: the read never returns stale data, and one read converges
+    every live replica byte-identically."""
+    store = make_store(3, replication=2)
+    down = 2
+    k = _key_on(store, down)
+    store.set_down(down)
+    store.put(k, b"NEWVAL" * 8, now=1.0)
+    store.hints.take(down)                    # lose the hints
+    store.set_down(down, False, now=2.0)
+    assert store.shards[down].data[k] == value_of(k)   # diverged (stale)
+    v, _ = store.get(k)
+    assert v == b"NEWVAL" * 8                 # never stale
+    assert store.read_repairs > 0
+    for s in store.replicas_of(k):
+        assert store.shards[s].data[k] == b"NEWVAL" * 8
+
+
+def test_read_repair_disabled_still_serves_fresh():
+    store = make_store(3, replication=2, read_repair=False)
+    down = 0
+    k = _key_on(store, down)
+    store.set_down(down)
+    store.put(k, b"FRESH!" * 8, now=1.0)
+    store.hints.take(down)
+    store.set_down(down, False, now=2.0)
+    assert store.get(k)[0] == b"FRESH!" * 8   # routing avoids stale replica
+    assert store.read_repairs == 0
+    assert store.shards[down].data[k] == value_of(k)   # left stale
+
+
+def test_batched_reads_never_stale_after_rejoin():
+    store = make_store(4, replication=2, read_quorum=2)
+    down = 1
+    written = [k for k in all_keys() if down in store.replicas_of(k)][:10]
+    store.set_down(down)
+    for k in written:
+        store.put(k, b"QUORUM" * 8, now=1.0)
+    store.hints.take(down)                    # worst case: hints lost too
+    store.set_down(down, False, now=2.0)
+    fut = store.multi_get_async(written, now=3.0)
+    assert fut.values == [b"QUORUM" * 8] * len(written)
+
+
+# ---------------------------------------------------------------------------
+# Write quorum: tunable W+R>N consistency
+# ---------------------------------------------------------------------------
+
+
+def test_write_mode_validated():
+    with pytest.raises(ValueError):
+        ShardedDKVStore(2, write_mode="most")
+
+
+def test_quorum_write_completes_before_slowest_replica():
+    slow = LatencyModel(jitter_sigma=0.0, stall_frac=0.0, seed=2,
+                        rtt=5e-3, per_item_service=1.5e-3)
+    lats = [flat_latency(0), flat_latency(1), slow]
+    k = all_keys()[0]
+    acks = {}
+    for mode in ("all", "quorum"):
+        store = ShardedDKVStore(3, latencies=lats, replication=3,
+                                write_mode=mode)
+        store.load([(k, value_of(k))])
+        acks[mode] = store.put(k, b"x" * VALUE_PAD, now=0.0)
+    assert acks["quorum"] < acks["all"]       # W=2 of 3 acks, not the tail
+    # every live replica still applied the write
+    store = ShardedDKVStore(3, latencies=lats, replication=3,
+                            write_mode="quorum")
+    store.load([(k, value_of(k))])
+    store.put(k, b"y" * VALUE_PAD, now=0.0)
+    for s in store.replicas_of(k):
+        assert store.shards[s].data[k] == b"y" * VALUE_PAD
+
+
+def test_quorum_write_unavailable_below_majority_leaves_no_state():
+    """A quorum write with fewer than W live preference-list replicas must
+    fail — and, like any failed write, leave no applied copy and no hint
+    (no silent degradation to write-one)."""
+    store = ShardedDKVStore(3, latencies=[flat_latency(i) for i in range(3)],
+                            replication=3, write_mode="quorum")
+    store.load((k, value_of(k)) for k in all_keys())
+    k = all_keys()[0]
+    reps = store.replicas_of(k)
+    store.set_down(reps[0])
+    store.put(k, b"two-live-acks" * 4, now=0.0)     # W=2 of 2 live: fine
+    store.set_down(reps[1])
+    with pytest.raises(KeyError):
+        store.put(k, b"one-live-ack" * 4, now=1.0)  # 1 live < W=2: refuse
+    assert store.hints.pending(reps[0]) == 1        # only the first write
+    assert store.hints.pending(reps[1]) == 0
+    assert store.shards[reps[2]].data[k] == b"two-live-acks" * 4
+
+
+def test_mid_move_new_keys_leave_no_orphan_copies():
+    """A brand-new key written during the streaming window is dual-written
+    to old- and new-ring owners; the cutover must sweep the copies on
+    nodes that do not own it under the new ring."""
+    store = make_store(2, replication=1)
+    new_keys = [("t", f"fresh{i}", "c") for i in range(40)]
+    fired = []
+
+    def on_batch(t):
+        if fired:
+            return
+        fired.append(t)
+        for k in new_keys:
+            store.put(k, b"mid-move-new" * 4, now=t)
+
+    store.add_node(latency=flat_latency(2), now=0.0, on_batch=on_batch)
+    assert fired
+    for k in new_keys:
+        assert store.get(k)[0] == b"mid-move-new" * 4
+        holders = [s for s in range(store.n_shards)
+                   if k in store.shards[s].data]
+        assert holders == [store.shard_of(k)]       # exactly the owner
+
+
+def test_decommission_discards_hints_from_mid_move_writes():
+    """A crashed node being decommissioned is still in the old ring while
+    its ranges stream; a mid-move write re-enqueues hints to it — they
+    must be discarded (the node never rejoins) rather than linger."""
+    store = make_store(4, replication=2)
+    gone = 3
+    k = _key_on(store, gone)
+    store.set_down(gone)
+
+    def on_batch(t):
+        if not store.hints.pending(gone):
+            store.put(k, b"mid-decomm" * 4, now=t)
+
+    store.remove_node(gone, now=0.0, on_batch=on_batch)
+    assert store.hints.pending(gone) == 0
+    assert len(store.hints) == 0
+    assert store.get(k)[0] == b"mid-decomm" * 4
+
+
+def test_mid_move_quorum_write_needs_preference_majority_acks():
+    """A fast pending-ring owner must not stand in for a preference-list
+    replica in the quorum count: W=2 of R=2 completes at the slower of
+    the two preference replicas, even while a (much faster) joiner also
+    applies the write."""
+    lat = [LatencyModel(jitter_sigma=0.0, stall_frac=0.0, seed=0,
+                        rtt=2e-3, per_item_service=1e-3),
+           LatencyModel(jitter_sigma=0.0, stall_frac=0.0, seed=1,
+                        rtt=8e-3, per_item_service=2e-3)]
+    store = ShardedDKVStore(2, latencies=lat, replication=2,
+                            write_mode="quorum")
+    store.load((k, value_of(k)) for k in all_keys())
+    k = all_keys()[0]
+    acked = []
+
+    def on_batch(t):
+        if not acked:
+            acked.append((t, store.put(k, b"mid-move-q" * 4, now=t)))
+
+    fast_joiner = LatencyModel(jitter_sigma=0.0, stall_frac=0.0, seed=2,
+                               rtt=1e-6, per_item_service=1e-6)
+    store.add_node(latency=fast_joiner, now=0.0, on_batch=on_batch)
+    assert acked
+    # the ack is the slower preference replica's (>= its 8 ms rtt), not
+    # the fast joiner's near-zero one nor the faster replica's ~3 ms
+    t, ack = acked[0]
+    assert ack - t >= 8e-3
+
+
+def test_quorum_w_plus_r_gt_n_never_stale_through_crash_and_rejoin():
+    """R=3, W=2 (quorum write), R_read=2: at every step of a crash +
+    write + rejoin + second-crash scenario, reads return the newest
+    acknowledged value."""
+    store = ShardedDKVStore(3, latencies=[flat_latency(i) for i in range(3)],
+                            replication=3, read_quorum=2,
+                            write_mode="quorum")
+    store.load((k, value_of(k)) for k in all_keys())
+    k = all_keys()[7]
+    reps = store.replicas_of(k)
+
+    store.set_down(reps[0])                        # crash one replica
+    store.put(k, b"gen-1" * 8, now=1.0)            # W=2 live acks
+    assert store.get_async(k, now=1.0).value() == b"gen-1" * 8
+    store.set_down(reps[0], False, now=2.0)        # rejoin (hints drain)
+    assert store.shards[reps[0]].data[k] == b"gen-1" * 8
+
+    store.set_down(reps[1])                        # crash a different one
+    store.put(k, b"gen-2" * 8, now=3.0)
+    assert store.get_async(k, now=3.0).value() == b"gen-2" * 8
+    store.set_down(reps[1], False, now=4.0)
+    # anti-entropy converged everyone to the newest generation
+    for s in reps:
+        assert store.shards[s].data[k] == b"gen-2" * 8
+
+
+def test_quorum_read_waits_for_the_fresh_replica():
+    """When only a slow rejoiner holds the newest version, a quorum read
+    must not report completion at two stale (fast) acks: the value comes
+    from the fresh replica, so the read costs at least its latency."""
+    slow = LatencyModel(jitter_sigma=0.0, stall_frac=0.0, seed=0,
+                        rtt=5e-3, per_item_service=1.5e-3)
+    store = ShardedDKVStore(
+        3, latencies=[slow, flat_latency(1), flat_latency(2)],
+        replication=3, read_quorum=2, read_repair=False)
+    store.load((k, value_of(k)) for k in all_keys())
+    k = all_keys()[0]
+    fresh_node = 0                             # the slow node
+    others = [s for s in store.replicas_of(k) if s != fresh_node]
+    for s in others:
+        store.set_down(s)
+    store.put(k, b"only-on-slow" * 4, now=0.0)  # lands on node 0 alone
+    for s in others:
+        store.hints.take(s)                     # lose the hints...
+        store.set_down(s, False, now=0.0)       # ...then rejoin stale
+    fut = store.get_async(k, now=1.0)
+    assert fut.value() == b"only-on-slow" * 4   # never stale
+    assert fut.done_at - 1.0 >= 5e-3            # paid the slow fresh ack
+    bfut = store.multi_get_async([k], now=10.0)
+    assert bfut.values == [b"only-on-slow" * 4]
+    assert bfut.done_each[0] - 10.0 >= 5e-3
+
+
+# ---------------------------------------------------------------------------
+# Eviction coordination: BudgetRebalancer
+# ---------------------------------------------------------------------------
+
+
+def _sharded_cache(n_shards=2, total=10_000):
+    # iid == shard for iids < n_shards (identity mapping for tests)
+    return ShardedTwoSpaceCache(
+        n_shards, total, 0.1,
+        key_of=lambda i: i, shard_of=lambda k: k % n_shards)
+
+
+def test_rebalancer_shifts_budget_toward_hot_shard():
+    cache = _sharded_cache()
+    rb = BudgetRebalancer(hysteresis=0.05, smoothing=1.0)
+    total = sum(cache.budgets())
+    for i in range(90):
+        cache.lookup(0 + 2 * (i % 3))      # shard 0 traffic (iids 0,2,4)
+    for i in range(10):
+        cache.lookup(1)                    # a trickle on shard 1
+    assert rb.rebalance(cache) is True
+    b = cache.budgets()
+    assert sum(b) == total                 # byte budget conserved exactly
+    assert b[0] > b[1]
+    assert b[1] >= int(rb.min_share * total) - 1   # floor keeps it warm
+
+
+def test_rebalancer_hysteresis_and_idle_rounds():
+    cache = _sharded_cache()
+    rb = BudgetRebalancer(hysteresis=0.10, smoothing=1.0)
+    for _ in range(50):
+        cache.lookup(0)
+        cache.lookup(1)                    # perfectly balanced traffic
+    assert rb.rebalance(cache) is False    # targets within the band
+    assert rb.rebalance(cache) is False    # no new traffic at all
+    # a decisive skew does move the split
+    for _ in range(200):
+        cache.lookup(0)
+    assert rb.rebalance(cache) is True
+
+
+def test_rebalancer_adapts_when_ring_grows():
+    cache = _sharded_cache(2)
+    rb = BudgetRebalancer(hysteresis=0.05, smoothing=1.0)
+    for _ in range(50):
+        cache.lookup(0)
+    rb.rebalance(cache)
+    total = sum(cache.budgets())
+    cache.add_shard()                      # node joined
+    assert sum(cache.budgets()) == total   # conservation through growth
+    cache.shard_of = lambda k: k % 3
+    for _ in range(300):
+        cache.lookup(2)                    # iid 2 now homes on shard 2
+    assert rb.rebalance(cache) is True
+    assert cache.budgets()[2] > 0
+
+
+def test_drop_shard_folds_budget_back_and_stays_dead():
+    """Removing a node must not strand its cache partition's byte budget,
+    and the rebalancer must never resurrect the dead partition."""
+    cache = _sharded_cache(3, total=9_000)
+    total = sum(cache.budgets())
+    cache.drop_shard(2)
+    b = cache.budgets()
+    assert b[2] == 0
+    assert sum(b) == total                 # folded back, not stranded
+    rb = BudgetRebalancer(hysteresis=0.01, smoothing=1.0)
+    cache.shard_of = lambda k: k % 2       # ring no longer maps to 2
+    for _ in range(200):
+        cache.lookup(0)
+    for _ in range(50):
+        cache.lookup(1)
+    rb.rebalance(cache)
+    b = cache.budgets()
+    assert b[2] == 0                       # dead partition stays dead
+    assert sum(b) == total
+
+
+def test_rebalancer_ignores_pre_removal_traffic_on_dead_partition():
+    """A delta window spanning pre-removal traffic must not resurrect a
+    dropped partition: the cache flags it dead explicitly."""
+    cache = _sharded_cache(3, total=9_000)
+    rb = BudgetRebalancer(hysteresis=0.01, smoothing=1.0)
+    for _ in range(40):
+        cache.lookup(0)
+        cache.lookup(1)
+        cache.lookup(2)                    # shard 2 busy pre-removal
+    rb.rebalance(cache)
+    total = sum(cache.budgets())
+    for _ in range(30):
+        cache.lookup(2)                    # more traffic, then the node dies
+    cache.drop_shard(2)
+    cache.shard_of = lambda k: k % 2
+    for _ in range(100):
+        cache.lookup(0)
+    rb.rebalance(cache)
+    b = cache.budgets()
+    assert b[2] == 0                       # stale window didn't revive it
+    assert sum(b) == total
+
+
+def test_drain_skips_hints_for_rehomed_keys():
+    """A ring change while a node is down can re-home its hinted keys:
+    the drain must not re-materialize copies on a non-replica (keys the
+    node still owns must, of course, still replay)."""
+    store = make_store(4, replication=2)
+    down = 0
+    written = [k for k in all_keys() if down in store.replicas_of(k)]
+    store.set_down(down)
+    for k in written:
+        store.put(k, b"while-down" * 4, now=0.0)
+    assert store.hints.pending(down) == len(written)
+    for g in range(3):                     # ring growth re-homes a chunk
+        store.add_node(latency=flat_latency(4 + g), now=0.0)
+    rehomed = [k for k in written if down not in store.replicas_of(k)]
+    kept = [k for k in written if down in store.replicas_of(k)]
+    assert rehomed and kept                # both populations exercised
+    replayed = store.set_down(down, False, now=1.0)
+    assert replayed == len(kept)           # owed hints landed...
+    for k in kept:
+        assert store.shards[down].data[k] == b"while-down" * 4
+    for k in rehomed:                      # ...re-homed ones did not
+        assert k not in store.shards[down].data
+        for s in store.replicas_of(k):
+            assert store.shards[s].data[k] == b"while-down" * 4
+
+
+def test_client_built_after_removal_does_not_strand_budget():
+    """A ClusterClient constructed on a store that already lost a node
+    must retire the dead partitions up front — no budget stranded on
+    shards no key can map to."""
+    store = make_store(3, replication=2)
+    store.remove_node(1, now=0.0)
+    cluster = ClusterClient(store, ClusterConfig(
+        n_clients=2, palpatine=small_palpatine(cache_bytes=9_000)))
+    for t in cluster.tenants:
+        b = t.cache.budgets()
+        assert b[1] == 0 and 1 in t.cache.dead
+        assert sum(b) == 9_000            # whole budget on live partitions
+    _, vals = cluster.run([stream(950, n_sessions=20), []],
+                          collect_values=True)
+    assert all(v is not None for v in vals[0])
+
+
+def test_cluster_remove_node_keeps_tenant_budget_total():
+    store, cluster = _elastic_cluster(n_shards=3)
+    cluster.run([stream(850 + t, n_sessions=40) for t in range(2)])
+    totals = [sum(t.cache.budgets()) for t in cluster.tenants]
+    store.remove_node(2, now=store.frontier())
+    for t, before in zip(cluster.tenants, totals):
+        b = t.cache.budgets()
+        assert b[2] == 0                   # retired with the node
+        assert sum(b) == before            # budget conserved
+
+
+def test_add_shard_after_removal_gives_fair_share():
+    """Dead partitions must not dilute a later joiner's split: with two
+    live partitions, the newcomer's fair share is ~total/3, not total/4."""
+    cache = _sharded_cache(3, total=9_000)
+    cache.drop_shard(1)
+    total = sum(cache.budgets())
+    cache.add_shard()
+    b = cache.budgets()
+    assert sum(b) == total
+    assert b[1] == 0                       # dead partition stays dead
+    assert b[3] >= total // 3 - 2          # fair equal share
+
+
+def test_sharded_cache_rehome_is_targeted():
+    cache = _sharded_cache(2)
+    cache.put_demand(0, b"a", 8)
+    cache.put_demand(1, b"b", 8)
+    n = cache.rehome([0, 99])              # 99 never placed: no-op
+    assert n == 1
+    assert not cache.contains(0)           # remapped entry dropped
+    assert cache.contains(1)               # untouched entry survives
+
+
+# ---------------------------------------------------------------------------
+# Cluster-level elasticity e2e
+# ---------------------------------------------------------------------------
+
+
+def _elastic_cluster(n_shards=2, n_clients=2):
+    store = make_store(n_shards, replication=2)
+    cluster = ClusterClient(store, ClusterConfig(
+        n_clients=n_clients, palpatine=small_palpatine(),
+        rebalance_every_ops=200))
+    return store, cluster
+
+
+def test_cluster_add_node_grows_caches_and_keeps_values_correct():
+    store, cluster = _elastic_cluster()
+    cluster.run([stream(800 + t, n_sessions=60) for t in range(2)])
+    for t in cluster.tenants:
+        assert len(t.cache.spaces) == 2
+    report = store.add_node(latency=flat_latency(2), now=store.frontier())
+    assert report.keys_streamed > 0
+    for t in cluster.tenants:
+        assert len(t.cache.spaces) == 3    # membership event grew caches
+    _, vals = cluster.run(
+        [stream(900 + t, n_sessions=60) for t in range(2)],
+        collect_values=True)
+    for tenant_vals, tenant_stream in zip(
+            vals, [stream(900 + t, 60) for t in range(2)]):
+        expected = [value_of(k) for sess in tenant_stream for k in sess]
+        assert tenant_vals == expected
+
+
+def test_cluster_hit_ratio_recovers_after_scale_out():
+    """The deterministic elasticity e2e: steady state, scale-out (miss
+    spike from the targeted invalidations), then recovery near steady
+    state while values stay correct throughout."""
+    store, cluster = _elastic_cluster()
+    cluster.run([stream(100 + t, n_sessions=100) for t in range(2)])
+    cluster.mine_all()
+    cluster.exchange_patterns()
+
+    cluster.reset_stats()
+    cluster.run([stream(200 + t, n_sessions=80) for t in range(2)])
+    steady = cluster.aggregate_stats().hit_rate
+    assert steady > 0.2
+
+    report = store.add_node(latency=flat_latency(2), now=store.frontier())
+    assert 0 < report.moved_fraction < 0.9
+
+    cluster.reset_stats()
+    cluster.run([stream(300 + t, n_sessions=80) for t in range(2)])
+    recovered = cluster.aggregate_stats().hit_rate
+    assert recovered > 0.8 * steady        # the spike is transient
+
+
+def test_mid_move_written_key_stays_cacheable_after_remove():
+    """A key first written mid-move lands (old ring) on the leaving node's
+    cache partition; the membership event must rehome it, or the tenant's
+    placement stays pinned to the dead zero-capacity partition and the key
+    becomes permanently uncacheable."""
+    store, cluster = _elastic_cluster(n_shards=3)
+    tenant = cluster.tenants[0]
+    gone = 2
+    k = next(("t", f"fresh{i}", "c") for i in range(1000)
+             if store.shard_of(("t", f"fresh{i}", "c")) == gone)
+    fired = []
+
+    def on_batch(now):
+        if not fired:
+            fired.append(now)
+            tenant.clock.sync(now)
+            tenant.write(k, b"mid-move-value" * 4)
+
+    store.remove_node(gone, now=store.frontier(), on_batch=on_batch)
+    assert fired
+    tenant.clock.sync(store.frontier())
+    v, _ = tenant.read(k)
+    assert v == b"mid-move-value" * 4
+    iid = tenant.logger.db.item_id(k)
+    assert tenant.cache.contains(iid)      # re-placed on a live partition
+
+
+def test_cluster_serves_through_crash_write_rejoin_cycle():
+    store, cluster = _elastic_cluster()
+    a, b = cluster.tenants
+    key = ("t", "r3", "c")
+    down = store.replicas_of(key)[0]
+    b.read(key)
+    store.set_down(down)
+    a.write(key, b"while-down" * 4)
+    assert b.read(key)[0] == b"while-down" * 4
+    store.set_down(down, False)            # hints drain at the frontier
+    for s in store.replicas_of(key):
+        assert store.shards[s].data[key] == b"while-down" * 4
+    assert b.read(key)[0] == b"while-down" * 4

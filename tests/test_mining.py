@@ -266,3 +266,54 @@ def test_vertical_bitmaps_rowsort_fallback_matches_scatter(monkeypatch):
     np.testing.assert_array_equal(scatter.freq_items, rowsort.freq_items)
     np.testing.assert_array_equal(scatter.freq_support, rowsort.freq_support)
     np.testing.assert_array_equal(scatter.bits, rowsort.bits)
+
+
+# ---------------------------------------------------------------------------
+# Per-branch candidate narrowing (maxgap=None): the frontier walk restricts
+# each child's extension candidates to its parent's frequent extensions;
+# the DFS reference keeps the full candidate set — outputs must stay
+# identical (the differential guarding the optimization).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("minsup", [0.05, 0.1, 0.2])
+@pytest.mark.parametrize("maximal_only", [False, True])
+def test_candidate_narrowing_matches_dfs_for_unconstrained_gap(
+        maximal_only, minsup):
+    for seed in range(4):
+        db = make_db(seed=seed, n_sessions=80)
+        params = MiningParams(minsup=minsup, min_len=2, max_len=7,
+                              maxgap=None)
+        got = canon(_frontier_mine(db, params, maximal_only))
+        want = canon(_dfs_mine(db, params, maximal_only))
+        assert got == want
+
+
+def test_candidate_narrowing_not_applied_to_contiguous_walks():
+    """maxgap-constrained patterns must keep the full candidate set: a
+    child's contiguous occurrence need not contain a parent+item one, so
+    narrowing there would be unsound.  Guarded by the same differential."""
+    for maxgap in (1, 2):
+        db = make_db(seed=5, n_sessions=80)
+        params = MiningParams(minsup=0.05, min_len=2, max_len=7,
+                              maxgap=maxgap)
+        assert canon(_frontier_mine(db, params, False)) == \
+            canon(_dfs_mine(db, params, False))
+
+
+def test_frontier_support_allowed_mask_zeroes_disallowed_pairs():
+    db = make_db(seed=3)
+    params = MiningParams(minsup=0.05, min_len=2, max_len=6, maxgap=None)
+    vb = VerticalBitmaps(db, 1)
+    slots = vb.extension_slots(vb.bits, None)
+    full = _frontier_support(slots, vb.bits, params)
+    k = vb.bits.shape[0]
+    rng = np.random.default_rng(0)
+    allowed = rng.random((k, k)) < 0.5
+    masked = _frontier_support(slots, vb.bits, params, allowed=allowed)
+    assert (masked[allowed] == full[allowed]).all()
+    assert (masked[~allowed] == 0).all()
+    # an all-False mask short-circuits to zero support
+    none = _frontier_support(slots, vb.bits, params,
+                             allowed=np.zeros((k, k), bool))
+    assert (none == 0).all()
