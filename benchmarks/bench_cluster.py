@@ -23,6 +23,16 @@ storm, and the recovery window once prefetching re-warms the remapped keys.
   cluster_elastic_recovery                      — recovered/steady hit ratio
                                                   + moved key fraction
 
+The detection-mode sweep is the degraded scenario with *zero* ``set_down``
+calls: a node crashes mid-workload, suspicion must emerge from traffic
+(phi-accrual failure detection), quorum writes complete via sloppy-quorum
+ring successors, and after the node recovers the probe acks clear the
+verdict and hinted handoffs converge every replica byte-identically.
+
+  cluster_detect_{steady,crashed,recovered} — hit ratio + p99 windows
+  cluster_detect_verdicts                   — suspected/cleared/converged
+                                              flags + discovery cost
+
 CLI::
 
     python -m benchmarks.bench_cluster --quick \
@@ -231,11 +241,74 @@ def elastic_sweep(quick: bool = True, results: dict | None = None) -> dict:
     return results
 
 
+def detection_sweep(quick: bool = True, results: dict | None = None) -> dict:
+    """Emergent-failure window: steady state, then a crash with NO
+    ``set_down`` (discovery timeouts -> suspicion -> sloppy-quorum
+    writes), then recovery (probe acks clear the verdict, hints hand
+    back).  The headline flags — suspected, cleared, converged — are
+    deterministic 1.0s the perf gate refuses to let regress."""
+    results = {} if results is None else results
+    n_shards, n_clients = 3, 3
+    n_tx = 60 if quick else 150
+    gen = TPCC(TPCCConfig())
+    store = ShardedDKVStore(
+        n_shards, latencies=degraded_latencies(n_shards, factor=1.0),
+        replication=2, write_mode="quorum",
+        failure_detection=True, sloppy_quorum=True)
+    store.load(gen.dataset())
+    cluster = ClusterClient(store, ClusterConfig(
+        n_clients=n_clients, palpatine=palpatine_config(),
+        rebalance_every_ops=500))
+    cluster.run(tenant_streams(gen, n_clients, n_tx, seed=31))
+    cluster.mine_all()
+    cluster.exchange_patterns()
+
+    def window(label: str, seed: int) -> None:
+        cluster.reset_stats()
+        lats = [l for ls in cluster.run(
+            tenant_streams(gen, n_clients, n_tx, seed=seed)) for l in ls]
+        hit = cluster.aggregate_stats().hit_rate
+        p99 = _p99_us(lats)
+        results[f"cluster_detect_{label}_hit"] = hit
+        results[f"cluster_detect_{label}_p99_us"] = p99
+        row(f"cluster_detect_{label}", latency_stats(lats)["mean_us"],
+            hit_rate=hit, p99_us=p99)
+
+    window("steady", 33)
+    victim = 1
+    timeouts_before = store.rpc_timeouts
+    store.shards[victim].crash()           # nothing declared anywhere
+    window("crashed", 35)
+    suspected = float(store.detector.suspected(victim))
+    discovery_timeouts = store.rpc_timeouts - timeouts_before
+    store.shards[victim].recover()
+    window("recovered", 37)
+    cleared = float(not store.detector.suspected(victim))
+    diverged = checked = 0
+    for k, _ in gen.dataset()[::53]:
+        copies = {store.shards[s].data.get(k)
+                  for s in store.replicas_of(k)}
+        checked += 1
+        diverged += len(copies) > 1
+    converged = 1.0 - diverged / checked if checked else 0.0
+    results["cluster_detect_suspected"] = suspected
+    results["cluster_detect_cleared"] = cleared
+    results["cluster_detect_converged"] = converged
+    row("cluster_detect_verdicts", discovery_timeouts,
+        suspected=suspected, cleared=cleared, converged=converged,
+        discovery_timeouts=discovery_timeouts,
+        sloppy_writes=store.sloppy_writes, probes=store.probes,
+        stale_reads=store.stale_reads,
+        hints_replayed=store.hints.replayed)
+    return results
+
+
 def main(quick: bool = True, results: dict | None = None) -> dict:
     results = {} if results is None else results
     static_sweep(quick, results)
     elastic_sweep(quick, results)
     degraded_sweep(quick, results)
+    detection_sweep(quick, results)
     return results
 
 
@@ -257,17 +330,21 @@ def check(results: dict, committed: dict, max_regression: float) -> list[str]:
     # and let every other window regress unnoticed
     failures = []
     for family in ("cluster_s", "cluster_elastic", "cluster_degraded_r1",
-                   "cluster_degraded_r2"):
+                   "cluster_degraded_r2", "cluster_detect"):
         failures.extend(sum_gate(
             results, committed,
             lambda k, f=family: k.startswith(f) and k.endswith("_p99_us"),
             max_regression, f"{family}* p99 us"))
+    # the detection verdicts are deterministic 1.0 flags: suspicion must
+    # land, clear, and converge — they gate like hit ratios
+    ratio_keys = ("elastic_recovery_ratio", "cluster_detect_suspected",
+                  "cluster_detect_cleared", "cluster_detect_converged")
     for key, old in committed.items():
         new = results.get(key)
         if not isinstance(old, (int, float)) or \
                 not isinstance(new, (int, float)):
             continue
-        if (key.endswith("_hit") or key == "elastic_recovery_ratio") \
+        if (key.endswith("_hit") or key in ratio_keys) \
                 and old >= 0.05 and new < old / max_regression:
             failures.append(f"{key}: {new:.3f} < committed {old:.3f} "
                             f"/ {max_regression}")

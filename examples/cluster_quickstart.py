@@ -15,7 +15,15 @@ joins under load (only its owed key ranges stream over, ~1/(N+1) of the
 placements; caches take targeted invalidations, not a flush), and a node
 crashes while writes land — hinted handoffs queue for it and drain on
 rejoin, with read-repair as the backstop, converging every replica to
-byte-identical state.  Run:
+byte-identical state.
+
+The finale never calls ``set_down`` at all: a node *crashes* and the
+cluster must notice by itself.  The first reads pay the ack timeout and
+feed the phi-accrual failure detector; the suspicion verdict lands within
+two missed acks; a write owed to the suspect hands off to the next ring
+successor (sloppy quorum, stamped with the intended owner); and when the
+process comes back, probe acks clear the verdict and the hint hands the
+write back — byte-identical convergence, end to end emergent.  Run:
 
     PYTHONPATH=src python examples/cluster_quickstart.py
 """
@@ -41,7 +49,8 @@ def sessions(seed, n, hot_users=10):
 
 
 def main():
-    store = ShardedDKVStore(n_shards=4, replication=2)
+    store = ShardedDKVStore(n_shards=4, replication=2,
+                            failure_detection=True, sloppy_quorum=True)
     store.load(((("users", f"u{i}", col), f"{col}-of-u{i}".encode())
                 for i in range(2_000) for col in COLS))
     print("containers per storage node (R=2, each key on 2 nodes):",
@@ -127,6 +136,49 @@ def main():
     print(f"rejoin: {replayed} hint replayed on the write channel — all "
           f"replicas byte-identical (read-repair would catch lost hints: "
           f"{store.read_repairs} repairs so far)")
+
+    # -- emergent failure detection: this time nobody calls set_down ------
+    det = store.detector
+    key = ("users", "u9", "feed")
+    victim = store.replicas_of(key)[0]
+    store.shards[victim].crash()                   # the process just dies
+    t = store.frontier()
+    # the write scatters to both replicas; the victim's ack never comes —
+    # one timeout window later the coordinator hands its copy to the next
+    # ring successor and stamps the hint with the intended owner
+    store.put(key, b"sloppy-feed-for-u9", now=t)
+    holder = store.hints.get_hint(victim, key)[2]
+    print(f"\nnode {victim} crashed (undeclared): the write's ack expired "
+          f"after {store.rpc_timeout * 1e3:.0f} virtual ms "
+          f"(phi={det.phi(victim):.0f}), copy handed to ring successor "
+          f"{holder} (sloppy quorum) with a hint for owner {victim}")
+    on_victim = [("users", f"u{u}", c) for u in range(40) for c in COLS
+                 if victim in store.replicas_of(("users", f"u{u}", c))]
+    ops = 1
+    while not det.suspected(victim):
+        store.put(on_victim[ops % len(on_victim)], b"w" * 16, now=t + ops)
+        ops += 1
+    print(f"suspicion verdict after {ops} writes' missed acks (phi-accrual "
+          f"from traffic alone) — everything now routes around node "
+          f"{victim} at full speed; {store.hints.pending(victim)} hints "
+          f"pending, {store.sloppy_writes} sloppy handoffs so far")
+
+    # the process comes back; probes notice, the verdict clears, the
+    # hint hands the write back, the stray holder copy is pruned
+    store.shards[victim].recover()
+    ops = 0
+    while det.suspected(victim) and ops < 400:
+        store.get_async(on_victim[ops % len(on_victim)], now=t + 100.0 + ops)
+        ops += 1
+    assert not det.suspected(victim)
+    copies = {store.shards[s].data[key] for s in store.replicas_of(key)}
+    assert copies == {b"sloppy-feed-for-u9"}
+    assert key not in store.shards[holder].data
+    print(f"recovery: {store.probes} probes total, verdict cleared after "
+          f"~{ops} ops, hint handed back — replicas byte-identical, "
+          f"holder pruned; detector saw {det.timeouts} missed acks, "
+          f"{det.suspicions} suspicion, {det.clears} clear; "
+          f"set_down calls: 0 in this whole section")
 
 
 if __name__ == "__main__":

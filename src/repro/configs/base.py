@@ -9,7 +9,7 @@ configs are only ever lowered via ShapeDtypeStructs in the dry-run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 __all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "reduced"]
 

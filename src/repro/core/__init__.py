@@ -19,9 +19,13 @@ from .cluster import (
 from .heuristics import HEURISTICS, HeuristicConfig, PrefetchEngine
 from .membership import (
     BudgetRebalancer,
+    FailureDetector,
     HintedHandoffLog,
+    LeaseConflict,
+    LeaseTable,
     MembershipEvent,
     MoveReport,
+    RangeLease,
 )
 from .metastore import PatternMetastore
 from .mining import (
@@ -42,7 +46,8 @@ __all__ = [
     "AccessLogger", "ALGORITHMS", "BITMAP_ALGOS", "BaselineClient",
     "BudgetRebalancer",
     "CacheStats", "Channel",
-    "Clock", "HintedHandoffLog", "MembershipEvent", "MoveReport",
+    "Clock", "FailureDetector", "HintedHandoffLog", "LeaseConflict",
+    "LeaseTable", "MembershipEvent", "MoveReport", "RangeLease",
     "RPCFuture",
     "ClusterBaseline", "ClusterClient", "ClusterConfig", "Container",
     "HEURISTICS", "HeuristicConfig", "LatencyModel",

@@ -71,6 +71,7 @@ class Channel:
 
     def __init__(self, width: int = 1):
         self.lanes = [0.0] * max(1, int(width))
+        self.issued = 0          # RPCs admitted (ack accounting)
 
     @property
     def free_at(self) -> float:
@@ -90,6 +91,7 @@ class Channel:
         i = min(range(len(self.lanes)), key=self.lanes.__getitem__)
         done = max(now, self.lanes[i]) + service
         self.lanes[i] = done
+        self.issued += 1
         return done
 
 
@@ -105,6 +107,11 @@ class RPCFuture:
     done_at: float                       # when the whole RPC lands
     done_each: list = dataclasses.field(default_factory=list)  # per key
     node: Optional[int] = None           # serving node (sharded stores)
+    #: missed-ack accounting for the failure detector: True when the RPC
+    #: (or one of its attempts) expired instead of acking, and how many
+    #: replica retries the coordinator paid before this future resolved
+    timed_out: bool = False
+    retries: int = 0
 
     def result(self) -> tuple[list, float]:
         return self.values, self.done_at
@@ -175,6 +182,12 @@ class SimulatedDKVStore:
         self.write_channel = Channel(1)  # write-behind channel (WAL path)
         self.gets = 0
         self.bytes_served = 0
+        #: crashed == the process is gone: RPCs to this node never ack (the
+        #: sharded front-end observes timeouts and feeds the failure
+        #: detector).  Unlike ``ShardedDKVStore.set_down`` — a *declared*
+        #: verdict the router consults — a crash is invisible until traffic
+        #: runs into it, which is exactly what emergent detection needs.
+        self.crashed = False
         #: EWMA of per-item demand service time — the "how fast is this
         #: node lately" signal replica-aware routing steers by
         self.ewma_service: Optional[float] = None
@@ -201,6 +214,17 @@ class SimulatedDKVStore:
     def load(self, items: Iterable[tuple]) -> None:
         for k, v in items:
             self.data[k] = v
+
+    # -- failure injection ------------------------------------------------
+    def crash(self) -> None:
+        """Kill the node: in-flight and future RPCs stop acking.  Nothing
+        is *declared* anywhere — detection must emerge from traffic."""
+        self.crashed = True
+
+    def recover(self) -> None:
+        """The process is back (data intact, possibly stale).  Again
+        nothing is declared: the cluster notices via probe acks."""
+        self.crashed = False
 
     # -- foreground (demand) path ----------------------------------------
     def _note_service(self, latency: float, n_items: int) -> None:

@@ -69,11 +69,14 @@ class LRUSpace:
 
     def put(self, key, entry: _Entry) -> list:
         """Insert/replace; returns evicted keys."""
-        if entry.size > self.capacity:
-            return []  # cannot fit at all (incl. capacity == 0)
         old = self.od.pop(key, None)
         if old is not None:
             self.used -= old.size
+        if entry.size > self.capacity:
+            # cannot fit at all (incl. capacity == 0) — but any previous
+            # entry under this key is already gone: keeping it would serve
+            # the superseded value on the next lookup
+            return []
         self.od[key] = entry
         self.used += entry.size
         evicted = []

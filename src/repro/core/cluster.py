@@ -37,7 +37,9 @@ from .backstore import LatencyModel, RPCFuture, SimulatedDKVStore
 from .cache import CacheStats, TwoSpaceCache
 from .membership import (
     BudgetRebalancer,
+    FailureDetector,
     HintedHandoffLog,
+    LeaseTable,
     MembershipEvent,
     MoveReport,
     _hash64,
@@ -108,7 +110,11 @@ class ShardedDKVStore:
                  latencies: Optional[Sequence[LatencyModel]] = None,
                  vnodes: int = 64, replication: int = 1,
                  read_quorum: int = 1, write_mode: str = "all",
-                 read_repair: bool = True):
+                 read_repair: bool = True,
+                 failure_detection: bool = False,
+                 sloppy_quorum: bool = False,
+                 rpc_timeout: float = 10e-3,
+                 detector: Optional[FailureDetector] = None):
         if latencies is None:
             latencies = [LatencyModel(seed=1009 + i) for i in range(n_shards)]
         if len(latencies) != n_shards:
@@ -128,21 +134,43 @@ class ShardedDKVStore:
         self.vnodes = int(vnodes)
         self.hints = HintedHandoffLog()
         self.read_repairs = 0
+        #: emergent failure detection: suspicion accrued from missed acks
+        #: and service times (None = verdicts come only from ``set_down``)
+        self.detector = (detector if detector is not None
+                         else FailureDetector() if failure_detection else None)
+        #: coordinator-side ack deadline: an RPC to a crashed node expires
+        #: after this much virtual time and feeds the detector
+        self.rpc_timeout = float(rpc_timeout)
+        #: Dynamo sloppy quorums: a write owed to an unavailable preference
+        #: replica is handed to the next ring successor (stamped with the
+        #: intended owner via the hint log) and its ack counts toward W
+        self.sloppy_quorum = bool(sloppy_quorum)
+        self.sloppy_writes = 0
+        self.rpc_timeouts = 0        # missed acks observed (coordinator)
+        self.stale_reads = 0         # served below the global max version
+        self.probes = 0              # recovery pings sent to suspects
         self._write_version = 0
         self._watchers: list[Callable] = []
         self._membership_watchers: list[Callable] = []
         self._points, self._owners = build_ring(
             range(self.n_shards), self.vnodes)
         self._replica_cache: dict = {}
-        #: (points, owners, cache) of the incoming ring while a membership
-        #: change streams its ranges: writes apply to the union of old and
-        #: pending owners (Cassandra's pending-range writes), so an acked
-        #: mid-move write can never be destroyed by the post-cutover prune
-        self._pending_ring: Optional[tuple] = None
-        #: keys written during the streaming window — the cutover sweeps
+        #: (points, owners, cache) of each in-flight ring while membership
+        #: changes stream their ranges: writes apply to the union of the
+        #: installed and every pending ring's owners (Cassandra's
+        #: pending-range writes), so an acked mid-move write can never be
+        #: destroyed by the post-cutover prune
+        self._pending_rings: list[tuple] = []
+        #: keys written during a streaming window — the cutover sweeps
         #: their old-ring-only copies (keys absent from the pre-move
         #: resident snapshot would otherwise leak orphans on non-owners)
         self._pending_writes: set = set()
+        #: range-transfer leases: overlapping membership changes are
+        #: admitted concurrently iff their moved key sets are disjoint
+        self.leases = LeaseTable()
+        self._held_leases: list = []
+        self._deferred_changes: list = []
+        self._membership_depth = 0
 
     @property
     def write_quorum(self) -> int:
@@ -181,35 +209,89 @@ class ShardedDKVStore:
 
     def _write_targets(self, key) -> list[int]:
         """Nodes a write must reach: the installed preference list, plus —
-        while a membership change is streaming — the pending ring's owners
-        of the key, so the post-cutover prune can never destroy an acked
-        mid-move write."""
+        while membership changes are streaming — each pending ring's
+        owners of the key, so the post-cutover prune can never destroy an
+        acked mid-move write."""
         targets = list(self.replicas_of(key))
-        if self._pending_ring is not None:
-            pts, own, cch = self._pending_ring
+        for pts, own, cch in self._pending_rings:
             for s in self._ring_replicas(key, pts, own, cch):
                 if s not in targets:
                     targets.append(s)
         return targets
 
+    # -- failure verdicts --------------------------------------------------
+    def _suspected(self, shard: int) -> bool:
+        return self.detector is not None and self.detector.suspected(shard)
+
+    def _unavailable(self, shard: int) -> bool:
+        """The router's availability picture: declared down (``set_down``)
+        or suspected by the failure detector.  A crashed-but-unsuspected
+        node is NOT here — its failure is only discoverable by paying the
+        ack timeout, which is exactly how the detector learns."""
+        return shard in self.down or self._suspected(shard)
+
+    def _failed(self, shard: int) -> bool:
+        """The transfer coordinator's view (membership streaming): it
+        observes its own timeouts synchronously, so a crashed node is a
+        failed source/destination even before the detector's verdict."""
+        return self._unavailable(shard) or self.shards[shard].crashed
+
+    def _note_ack(self, shard: int, service: Optional[float] = None) -> None:
+        if self.detector is not None and \
+                self.detector.observe_ack(shard, service):
+            # the ack cleared a standing suspicion: emergent rejoin —
+            # hand the node's hinted writes back
+            self._drain_hints(shard)
+
+    def _note_timeout(self, shard: int) -> None:
+        self.rpc_timeouts += 1
+        if self.detector is not None:
+            self.detector.observe_timeout(shard)
+
+    def _maybe_probe(self, now: float) -> None:
+        """Ping suspects every ``probe_every``-th op (op-driven, so it is
+        deterministic on the virtual clock).  A crashed suspect keeps
+        missing acks; a recovered one acks, and ``clear_acks`` consecutive
+        probe acks revoke the verdict and drain its hints — recovery is as
+        emergent as detection, no ``set_down(shard, False)`` required."""
+        det = self.detector
+        if det is None:
+            return
+        for s in sorted(det.suspects()):
+            if s in self.down or s in self.removed:
+                continue          # declared down: recovery is explicit
+            if not det.should_probe(s):
+                continue
+            self.probes += 1
+            if self.shards[s].crashed:
+                det.observe_timeout(s)
+            elif det.observe_ack(s):
+                self._drain_hints(s, now)
+
     def set_down(self, shard: int, down: bool = True,
                  now: Optional[float] = None) -> int:
-        """Mark a node failed/recovered.  Reads route around down replicas;
-        writes leave them *hinted handoffs*.  Recovery (``down=False``)
-        drains the node's hints on its write channel (anti-entropy re-sync)
-        and returns the number of replayed writes."""
+        """Mark a node failed/recovered — the *declared* override (tests,
+        operators); the failure detector reaches the same verdicts from
+        traffic alone.  Reads route around down replicas; writes leave
+        them *hinted handoffs*.  Recovery (``down=False``) clears any
+        standing suspicion and drains the node's hints on its write
+        channel (anti-entropy re-sync), returning the replayed count."""
         if down:
             self.down.add(shard)
             return 0
         self.down.discard(shard)
+        if self.detector is not None:
+            self.detector.reset(shard)
         return self._drain_hints(shard, now)
 
     def _drain_hints(self, shard: int, now: Optional[float] = None) -> int:
         """Replay the recovered node's hinted handoffs on its write channel.
         Keys the node already holds at an equal-or-newer version (a
-        read-repair won the race) are skipped.  No watcher storm: each
-        hinted write already fired the cluster's coherence watchers from
-        its live replicas at write time."""
+        read-repair won the race) are skipped.  Hints carried by a sloppy-
+        quorum *holder* hand the key back: once the owner has it, the
+        holder's stray copy is pruned.  No watcher storm: each hinted
+        write already fired the cluster's coherence watchers from its live
+        replicas at write time."""
         pending = self.hints.take(shard)
         if not pending:
             return 0
@@ -217,7 +299,12 @@ class ShardedDKVStore:
         t = self.frontier() if now is None else float(now)
         replayed = 0
         for k in sorted(pending, key=repr):
-            value, ver = pending[k]
+            value, ver, holder = pending[k]
+            if holder is not None and holder not in self.replicas_of(k):
+                # hand-back: the holder only kept the copy to back this
+                # hint; once processed it must not serve the key again
+                if self.shards[holder].data.pop(k, None) is not None:
+                    self.shards[holder].versions.pop(k, None)
             if shard not in self.replicas_of(k):
                 continue   # a ring change re-homed the key while the node
                            # was down: replaying would re-materialize a
@@ -231,8 +318,32 @@ class ShardedDKVStore:
         self.hints.replayed += replayed
         return replayed
 
-    def _live_replicas(self, key) -> list[int]:
-        reps = [s for s in self.replicas_of(key) if s not in self.down]
+    def _walk_ring(self, key):
+        """Every distinct live ring owner clockwise from the key's point
+        (the preference list is this walk's first R entries)."""
+        h = _hash64(key)
+        i = bisect.bisect_right(self._points, h) % len(self._points)
+        seen: set[int] = set()
+        for step in range(len(self._owners)):
+            s = self._owners[(i + step) % len(self._owners)]
+            if s not in seen:
+                seen.add(s)
+                yield s
+
+    def _sloppy_holders(self, key) -> list[int]:
+        """Ring successors beyond the preference list holding a sloppy
+        copy of the key — the read path of last resort when every
+        preference replica is unavailable."""
+        pref = set(self.replicas_of(key))
+        return [s for s in self._walk_ring(key)
+                if s not in pref and not self._unavailable(s)
+                and not self.shards[s].crashed and self.shards[s].contains(key)]
+
+    def _live_replicas(self, key, exclude: Sequence[int] = ()) -> list[int]:
+        reps = [s for s in self.replicas_of(key)
+                if not self._unavailable(s) and s not in exclude]
+        if not reps and self.sloppy_quorum:
+            reps = [s for s in self._sloppy_holders(key) if s not in exclude]
         if not reps:
             raise KeyError(f"all replicas of {key!r} are down")
         return reps
@@ -240,25 +351,31 @@ class ShardedDKVStore:
     def _repair(self, key, stale: Sequence[int], value, ver: int,
                 now: float) -> None:
         """Read-repair: overwrite stale replicas from a fresh peer, costed
-        on each stale node's write channel.  Watchers stay quiet — the
-        repaired value is the one clients already observe through the
-        fresh replicas."""
+        on each stale node's write channel.  Crashed replicas are skipped
+        (nothing can land on them; hinted handoff / a later read-repair
+        converges them).  Watchers stay quiet — the repaired value is the
+        one clients already observe through the fresh replicas."""
         if value is None:
             return
         for s in stale:
             node = self.shards[s]
+            if node.crashed:
+                continue
             node.data[key] = value
             node.versions[key] = ver
             node.write_channel.issue(now, node.latency.put(1, len(value)))
             self.read_repairs += 1
 
-    def _fresh_replicas(self, key, now: float) -> list[int]:
+    def _fresh_replicas(self, key, now: float,
+                        exclude: Sequence[int] = ()) -> list[int]:
         """Live replicas holding the key's newest version (the version
         probe is metadata, latency-free like :meth:`contains`).  Observed
         divergence — a replica that rejoined before its hints landed —
         triggers read-repair when enabled, so a single read converges the
-        key across its preference list."""
-        reps = self._live_replicas(key)
+        key across its preference list.  ``exclude`` drops replicas the
+        caller already timed out on: the result is then the freshest
+        still-*reachable* set (availability over freshness)."""
+        reps = self._live_replicas(key, exclude)
         if len(reps) == 1:
             return reps
         # a replica that does not hold the key at all is staler than any
@@ -270,23 +387,51 @@ class ShardedDKVStore:
         if min(vers) == vmax:
             return reps
         fresh = [s for s, v in zip(reps, vers) if v == vmax]
-        if self.read_repair:
+        sources = [s for s in fresh if not self.shards[s].crashed]
+        if self.read_repair and sources:
             self._repair(key, [s for s, v in zip(reps, vers) if v < vmax],
-                         self.shards[fresh[0]].data.get(key), vmax, now)
+                         self.shards[sources[0]].data.get(key), vmax, now)
         return fresh
 
-    def _route(self, key, now: float) -> int:
-        """Read-one-of-R: the fresh live replica with the lowest estimated
-        completion time — demand-channel queueing delay plus the node's
-        EWMA per-item service (how slow it has been lately)."""
-        reps = self._fresh_replicas(key, now)
+    def _best_of(self, reps: Sequence[int], now: float) -> int:
+        """The replica with the lowest estimated completion time —
+        demand-channel queueing delay plus the node's EWMA per-item
+        service (how slow it has been lately)."""
         if len(reps) == 1:
             return reps[0]
         return min(reps, key=lambda s: (
             self.shards[s].demand_backlog(now)
             + (self.shards[s].ewma_service or 0.0)))
 
-    def _group(self, keys: Sequence, now: float = 0.0) -> dict[int, list[int]]:
+    def _pick_serving(self, key, now: float) -> tuple[int, float, int]:
+        """Read-one-of-R routing with missed-ack handling: route to the
+        best fresh replica; if it turns out to be crashed the RPC expires
+        at ``rpc_timeout`` (the detector hears the miss) and the read
+        retries the next candidate.  When every fresh replica times out,
+        the freshest *reachable* copy is served instead (a counted stale
+        read — availability over freshness, Dynamo-style).  Returns
+        ``(node, waited, retries)`` where ``waited`` is the timeout delay
+        already paid before the winning RPC could issue."""
+        tried: set[int] = set()
+        waited = 0.0
+        while True:
+            fresh = self._fresh_replicas(key, now + waited, exclude=tried)
+            pick = self._best_of(fresh, now + waited)
+            if self.shards[pick].crashed:
+                self._note_timeout(pick)
+                tried.add(pick)
+                waited += self.rpc_timeout
+                continue
+            if tried:
+                vmax = max(self.shards[s].versions.get(key, 0)
+                           if key in self.shards[s].data else -1
+                           for s in self._live_replicas(key))
+                if self.shards[pick].versions.get(key, 0) < vmax:
+                    self.stale_reads += 1
+            return pick, waited, len(tried)
+
+    def _group(self, keys: Sequence, now: float = 0.0,
+               exclude: Sequence[int] = ()) -> dict[int, list[int]]:
         """Demand scatter plan: positions per chosen serving node.
 
         Planning is load-aware: items already assigned to a node during
@@ -297,7 +442,7 @@ class ShardedDKVStore:
         by_shard: dict[int, list[int]] = {}
         pending: dict[int, int] = {}
         for pos, k in enumerate(keys):
-            reps = self._fresh_replicas(k, now)
+            reps = self._fresh_replicas(k, now, exclude)
             if len(reps) == 1:
                 s = reps[0]
             else:
@@ -317,93 +462,192 @@ class ShardedDKVStore:
 
     def contains(self, key) -> bool:
         return any(self.shards[s].contains(key)
-                   for s in self.replicas_of(key) if s not in self.down)
+                   for s in self.replicas_of(key)
+                   if not self._unavailable(s) and not self.shards[s].crashed)
 
     # -- foreground (demand) path ------------------------------------------
     def get(self, key) -> tuple:
-        return self.shards[self._route(key, 0.0)].get(key)
+        pick, waited, _ = self._pick_serving(key, 0.0)
+        value, lat = self.shards[pick].get(key)
+        self._note_ack(pick, lat)
+        return value, waited + lat
 
     def get_async(self, key, now: float) -> RPCFuture:
-        """Futures-based demand read with replica-aware routing.  With a
+        """Futures-based demand read with replica-aware routing.  A read
+        that lands on a crashed (not-yet-suspected) replica expires at the
+        coordinator's ``rpc_timeout``, feeds the failure detector, and
+        retries the next candidate — so the first few reads after a crash
+        pay the timeout and every later one routes around it.  With a
         read quorum, issue to every live replica and complete at the q-th
         fastest ack (read amplification buys tail-latency insurance); the
         value always comes from a replica holding the newest version, so
         W + R > N reads are never stale."""
+        self._maybe_probe(now)
         if self.read_quorum <= 1:
-            node = self._route(key, now)
-            fut = self.shards[node].get_async(key, now)
-            fut.node = node
+            pick, waited, retries = self._pick_serving(key, now)
+            fut = self.shards[pick].get_async(key, now + waited)
+            self._note_ack(pick, fut.done_at - (now + waited))
+            fut.node = pick
+            fut.issue_time = now
+            fut.retries = retries
+            fut.timed_out = retries > 0
             return fut
-        fresh = set(self._fresh_replicas(key, now))
-        reps = self._live_replicas(key)
-        futs = {s: self.shards[s].get_async(key, now) for s in reps}
+        live, expired, waited_out = self._quorum_candidates(key)
+        for s in expired:
+            self._note_timeout(s)
+        fresh = set(self._fresh_replicas(key, now, exclude=expired))
+        futs = {s: self.shards[s].get_async(key, now) for s in live}
+        for s, f in futs.items():
+            self._note_ack(s, f.done_at - now)
         q = min(self.read_quorum, len(futs))
         best = min(fresh, key=lambda s: futs[s].done_at)
         # complete at the q-th fastest ack, but never before the replica
         # that supplied the value acks: when only a slow rejoiner holds
         # the newest version, the fresh read costs that replica's latency
-        # (the degraded-window tail this subsystem is measured on)
+        # (the degraded-window tail this subsystem is measured on).  A
+        # quorum left short by crashed replicas waits out their timeout.
         done = max(sorted(f.done_at for f in futs.values())[q - 1],
                    futs[best].done_at)
+        if waited_out:
+            done = max(done, now + self.rpc_timeout)
         return RPCFuture((key,), futs[best].values, now, done,
-                         done_each=[done], node=best)
+                         done_each=[done], node=best,
+                         timed_out=bool(expired), retries=len(expired))
+
+    def _scatter_read_one(self, keys: Sequence, now: float,
+                          fetch: Callable) -> tuple[list, list, int]:
+        """Shared read-one scatter loop with missed-ack retry: plan each
+        key onto its best fresh replica, expire whole sub-batches landing
+        on a crashed node (one detector miss per node, one ``rpc_timeout``
+        per round), and re-plan the expired keys among the survivors.
+        ``fetch(shard, sub_keys, t) -> (values, done_at)`` issues one
+        sub-batch; returns ``(values, done_each, retry_rounds)``."""
+        vals: list = [None] * len(keys)
+        done_each: list = [now] * len(keys)
+        remaining = list(enumerate(keys))
+        excluded: set[int] = set()
+        rounds = 0
+        while remaining:
+            t = now + rounds * self.rpc_timeout
+            sub_keys = [k for _, k in remaining]
+            plan = self._group(sub_keys, t, exclude=excluded)
+            retry: list = []
+            for shard, positions in sorted(plan.items()):
+                if self.shards[shard].crashed:
+                    self._note_timeout(shard)
+                    excluded.add(shard)
+                    retry.extend(remaining[p] for p in positions)
+                    continue
+                sub_vals, done_at = fetch(
+                    shard, [sub_keys[p] for p in positions], t)
+                self._note_ack(shard, done_at - t)
+                for p, v in zip(positions, sub_vals):
+                    pos = remaining[p][0]
+                    vals[pos] = v
+                    done_each[pos] = done_at
+            remaining = retry
+            rounds += 1
+        return vals, done_each, max(0, rounds - 1)
+
+    def _quorum_candidates(self, key) -> tuple[list[int], list[int], bool]:
+        """A quorum read's reachable candidates: the live preference
+        replicas, or — when every one of them is crashed and sloppy
+        quorums are on — the ring successors holding a sloppy copy.
+        Returns ``(reachable, crashed_replicas, waited_out)`` where
+        ``waited_out`` flags a quorum left short by *crashes* (the
+        coordinator really waited the ack timeout; a quorum short only
+        because of declared-down replicas waited on nothing)."""
+        reps = self._live_replicas(key)
+        dead = [s for s in reps if self.shards[s].crashed]
+        live = [s for s in reps if not self.shards[s].crashed]
+        waited_out = bool(dead) and len(live) < self.read_quorum
+        if not live and self.sloppy_quorum:
+            live = self._sloppy_holders(key)
+        if not live:
+            raise KeyError(f"all replicas of {key!r} are down")
+        return live, dead, waited_out
 
     def multi_get_async(self, keys: Sequence, now: float) -> RPCFuture:
         """Scatter-gather demand read: one pipelined sub-batch RPC per
         serving node, all in flight concurrently.  Read-one: each key joins
-        its routed replica's sub-batch.  Read-quorum: each key joins every
-        live replica's sub-batch and completes at the q-th fastest of its
-        replicas' batches.  The future's ``done_at`` is the slowest
-        per-key completion."""
-        vals: list = [None] * len(keys)
+        its routed replica's sub-batch; sub-batches landing on a crashed
+        node expire at ``rpc_timeout`` and their keys re-plan among the
+        remaining replicas (one detector miss per crashed node).
+        Read-quorum: each key joins every live replica's sub-batch (the
+        sloppy holders', when every preference replica is crashed) and
+        completes at the q-th fastest of its replicas' batches.  The
+        future's ``done_at`` is the slowest per-key completion."""
+        self._maybe_probe(now)
         if self.read_quorum <= 1:
-            plan = self._group(keys, now)
-            fresh_of: Optional[list[set]] = None
-        else:
-            plan = {}
-            fresh_of = [set(self._fresh_replicas(k, now)) for k in keys]
-            for pos, k in enumerate(keys):
-                for s in self._live_replicas(k):
-                    plan.setdefault(s, []).append(pos)
+            def fetch(shard, sub_keys, t):
+                fut = self.shards[shard].multi_get_async(sub_keys, t)
+                return fut.values, fut.done_at
+            vals, done_each, retries = self._scatter_read_one(
+                keys, now, fetch)
+            return RPCFuture(tuple(keys), vals, now,
+                             max(done_each, default=now),
+                             done_each=done_each,
+                             timed_out=retries > 0, retries=retries)
+        vals: list = [None] * len(keys)
+        plan = {}
+        fresh_of: list[set] = []
+        short: list[bool] = []   # quorum short because of *crashes* only
+        expired: set[int] = set()
+        for pos, k in enumerate(keys):
+            live, dead, waited_out = self._quorum_candidates(k)
+            expired.update(dead)
+            short.append(waited_out)
+            fresh_of.append(set(self._fresh_replicas(k, now, exclude=dead)))
+            for s in live:
+                plan.setdefault(s, []).append(pos)
+        for s in sorted(expired):
+            self._note_timeout(s)
         done_lists: list[list[float]] = [[] for _ in keys]
         fresh_done: list[list[float]] = [[] for _ in keys]
         for shard, positions in plan.items():
             fut = self.shards[shard].multi_get_async(
                 [keys[p] for p in positions], now)
+            self._note_ack(shard, fut.done_at - now)
             for p, v in zip(positions, fut.values):
-                if fresh_of is None or shard in fresh_of[p]:
+                if shard in fresh_of[p]:
                     vals[p] = v
                     fresh_done[p].append(fut.done_at)
                 done_lists[p].append(fut.done_at)
         q = self.read_quorum
         # per key: q-th fastest ack, floored at the earliest *fresh*
         # sub-batch ack (the value cannot land before a holder of the
-        # newest version has responded)
+        # newest version has responded); a quorum left short by crashed
+        # replicas waits out their timeout — a quorum short only because
+        # of *declared*-down replicas waited on nothing
         done_each = [max(sorted(ds)[min(q, len(ds)) - 1],
-                         min(fd, default=now)) if ds else now
-                     for ds, fd in zip(done_lists, fresh_done)]
+                         min(fd, default=now),
+                         now + self.rpc_timeout if was_short else now)
+                     if ds else now
+                     for ds, fd, was_short
+                     in zip(done_lists, fresh_done, short)]
         worst = max(done_each, default=now)
-        return RPCFuture(tuple(keys), vals, now, worst, done_each=done_each)
+        return RPCFuture(tuple(keys), vals, now, worst, done_each=done_each,
+                         timed_out=bool(expired), retries=len(expired))
 
     def multi_get(self, keys: Sequence) -> tuple[list, float]:
         """Scatter-gather: per-node sub-batches run in parallel; the caller
-        waits for the slowest node."""
-        vals: list = [None] * len(keys)
-        worst = 0.0
-        for shard, positions in self._group(keys).items():
-            sub, lat = self.shards[shard].multi_get([keys[p] for p in positions])
-            for p, v in zip(positions, sub):
-                vals[p] = v
-            worst = max(worst, lat)
-        return vals, worst
+        waits for the slowest node.  Sub-batches on a crashed node expire
+        and re-plan, like :meth:`multi_get_async`."""
+        def fetch(shard, sub_keys, t):
+            sub, lat = self.shards[shard].multi_get(sub_keys)
+            return sub, t + lat
+        vals, done_each, _ = self._scatter_read_one(keys, 0.0, fetch)
+        return vals, max(done_each, default=0.0)
 
     # -- background channels -----------------------------------------------
     def backlog(self, now: float) -> float:
-        """Least-loaded live node's backlog: prefetching is only fully shed
-        when *every* node's background channel is saturated (per-node
-        shedding happens inside :meth:`background_multi_get`)."""
+        """Least-loaded available node's backlog: prefetching is only fully
+        shed when *every* node's background channel is saturated (per-node
+        shedding happens inside :meth:`background_multi_get`).  Suspected
+        nodes are no more available to prefetching than declared-down
+        ones."""
         return min(s.backlog(now) for i, s in enumerate(self.shards)
-                   if i not in self.down and i not in self.removed)
+                   if i not in self.removed and not self._unavailable(i))
 
     def background_multi_get(
         self, keys: Sequence, now: float, backlog_cap: Optional[float] = None
@@ -412,13 +656,18 @@ class ShardedDKVStore:
         :meth:`_group`); each node serves its sub-batch on its own
         background channel (concurrently across nodes), so every key
         completes when *its* node's batch lands.  Nodes backlogged past
-        ``backlog_cap`` shed their sub-batch only."""
+        ``backlog_cap`` shed their sub-batch only.  A sub-batch placed on
+        a crashed node is shed too — prefetches are best-effort and never
+        retried — but its missed ack still feeds the failure detector."""
         vals: list = [None] * len(keys)
         done: list = [now] * len(keys)
         by_shard: dict[int, list[int]] = {}
         pending: dict[int, int] = {}
         for pos, k in enumerate(keys):
-            reps = self._fresh_replicas(k, now)
+            try:
+                reps = self._fresh_replicas(k, now)
+            except KeyError:
+                continue                    # unreachable: shed this key
             if len(reps) == 1:
                 s = reps[0]
             else:
@@ -430,54 +679,138 @@ class ShardedDKVStore:
             pending[s] = pending.get(s, 0) + 1
         for shard, positions in by_shard.items():
             node = self.shards[shard]
+            if node.crashed:
+                self._note_timeout(shard)
+                continue
             if backlog_cap is not None and node.backlog(now) > backlog_cap:
                 continue
             sub, done_at = node.background_get([keys[p] for p in positions], now)
+            self._note_ack(shard)
             for p, v in zip(positions, sub):
                 vals[p] = v
                 done[p] = done_at
         return vals, done
 
+    def _add_hint(self, owner: int, key, value: bytes, ver: int,
+                  holder: Optional[int] = None) -> None:
+        """Record a hinted handoff, pruning the stray copy of any
+        superseded hint's previous holder (the new write replaces it; a
+        holder copy without a live hint would linger as an orphan)."""
+        old = self.hints.get_hint(owner, key)
+        self.hints.add(owner, key, value, ver, holder=holder)
+        if old is not None and old[2] is not None and old[2] != holder \
+                and old[1] < ver and old[2] not in self.replicas_of(key):
+            node = self.shards[old[2]]
+            if node.versions.get(key, 0) < ver and \
+                    node.data.pop(key, None) is not None:
+                node.versions.pop(key, None)
+
+    def _sloppy_substitutes(self, key, failed: Sequence[int]
+                            ) -> list[tuple[int, int]]:
+        """Pair each failed preference replica with the next available
+        ring successor outside the preference list (Dynamo's sloppy
+        quorum).  A crashed candidate costs a missed ack and the walk
+        moves on — the coordinator's retry, observed by the detector."""
+        pref = set(self.replicas_of(key))
+        subs: list[tuple[int, int]] = []
+        taken: set[int] = set()
+        cands = iter([s for s in self._walk_ring(key)
+                      if s not in pref and s not in self.removed])
+        for owner in failed:
+            for s in cands:
+                if s in taken or self._unavailable(s):
+                    continue
+                if self.shards[s].crashed:
+                    self._note_timeout(s)
+                    continue
+                taken.add(s)
+                subs.append((owner, s))
+                break
+        return subs
+
     def put(self, key, value: bytes, now: float) -> float:
         """Replicated write, stamped with the next monotone version (the
         put frontier).  Every *live* replica applies it on its own
-        write-behind channel; down replicas get hinted handoffs.  The
-        logical write completes at the slowest live ack (``write_mode
-        ='all'``) or the W-th fastest where W is a replica majority
-        (``write_mode='quorum'`` — bounded write-tail exposure, and with a
-        majority read quorum W + R > N guarantees non-stale reads)."""
-        targets = self._write_targets(key)
-        live_pref = [s for s in self.replicas_of(key) if s not in self.down]
-        # unavailability checks come BEFORE any state mutates: a failed
+        write-behind channel; unavailable replicas get hinted handoffs,
+        and a crashed-but-unsuspected replica is discovered by its missed
+        ack (one ``rpc_timeout``, fed to the detector) before being
+        hinted.  With ``sloppy_quorum``, each failed preference replica's
+        write is handed to the next ring successor instead: the successor
+        applies it, the hint records it as the *holder*, and its ack
+        counts toward W — writes stay available with every preference
+        replica out.  The logical write completes at the slowest ack
+        (``write_mode='all'``) or the W-th fastest where W is a replica
+        majority (``write_mode='quorum'`` — bounded write-tail exposure,
+        and with a majority read quorum W + R > N guarantees non-stale
+        reads)."""
+        self._maybe_probe(now)
+        pref = list(self.replicas_of(key))
+        known_failed = [s for s in pref if self._unavailable(s)]
+        timed_out = [s for s in pref if s not in known_failed
+                     and self.shards[s].crashed]
+        live_pref = [s for s in pref if s not in known_failed
+                     and s not in timed_out]
+        failed = [s for s in pref if s in known_failed or s in timed_out]
+        for s in timed_out:
+            # the coordinator's missed acks: observed even when the write
+            # is then refused — the attempt happened, the detector heard it
+            self._note_timeout(s)
+        subs = (self._sloppy_substitutes(key, failed)
+                if self.sloppy_quorum and failed else [])
+        # availability checks come BEFORE any state mutates: a failed
         # write must leave no applied copy and no hint behind (a phantom
         # would materialize a write the caller was told never happened)
-        if not live_pref:
+        if not live_pref and not subs:
             raise KeyError(f"all replicas of {key!r} are down")
-        if self.write_mode == "quorum" and len(live_pref) < self.write_quorum:
+        if self.write_mode == "quorum" and \
+                len(live_pref) + len(subs) < self.write_quorum:
             raise KeyError(
                 f"quorum write to {key!r} unavailable: {len(live_pref)} "
-                f"live replicas < W={self.write_quorum}")
+                f"live replicas + {len(subs)} sloppy successors "
+                f"< W={self.write_quorum}")
         self._write_version += 1
         ver = self._write_version
-        pref = set(self.replicas_of(key))
+        holder_of = {owner: sub for owner, sub in subs}
         acks = []
-        pref_acks = []
-        for s in targets:
-            if s in self.down:
-                self.hints.add(s, key, value, ver)
-            else:
-                done = self.shards[s].put(key, value, now)
-                self.shards[s].versions[key] = ver
-                acks.append(done)
-                if s in pref:
-                    pref_acks.append(done)
-        if self._pending_ring is not None:
+        quorum_acks = []             # preference + sloppy-successor acks
+        for s in self._write_targets(key):
+            in_pref = s in set(pref)
+            if s in self.down or self._suspected(s) or self.shards[s].crashed:
+                if in_pref and s in holder_of:
+                    continue         # handled via its sloppy successor below
+                self._add_hint(s, key, value, ver)
+                continue
+            done = self.shards[s].put(key, value, now)
+            self.shards[s].versions[key] = ver
+            self._note_ack(s)
+            acks.append(done)
+            if in_pref:
+                quorum_acks.append(done)
+        for owner, sub in subs:
+            # the substitute write can only issue after the coordinator
+            # gave up on an unsuspected crash (one timeout window);
+            # known-failed owners are skipped upfront at no cost
+            t0 = now + self.rpc_timeout if owner in timed_out else now
+            done = self.shards[sub].put(key, value, t0)
+            self.shards[sub].versions[key] = ver
+            self._note_ack(sub)
+            self._add_hint(owner, key, value, ver, holder=sub)
+            self.sloppy_writes += 1
+            acks.append(done)
+            quorum_acks.append(done)
+        if self._pending_rings:
             self._pending_writes.add(key)
+        if timed_out:
+            # the write cannot be reported complete before the coordinator
+            # stopped waiting on the crashed replicas' acks
+            acks = [max(a, now + self.rpc_timeout) for a in acks] or \
+                [now + self.rpc_timeout]
         if self.write_mode == "quorum":
-            # W counts preference-list acks only: a fast pending-ring
-            # owner (mid-move) must not stand in for a replica majority
-            pref_acks.sort()
-            return pref_acks[min(self.write_quorum, len(pref_acks)) - 1]
+            # W counts preference-list and sloppy-successor acks only: a
+            # fast pending-ring owner (mid-move) must not stand in for a
+            # replica majority
+            quorum_acks.sort()
+            return quorum_acks[min(self.write_quorum, len(quorum_acks)) - 1]
         return max(acks)
 
     # -- membership (elastic ring; see repro.core.membership) --------------
@@ -864,8 +1197,13 @@ class ClusterClient:
     def rebalance_budgets(self) -> int:
         """One eviction-coordination round: re-split each tenant's cache
         budget across shards by its observed per-shard traffic skew.
+        Partitions of *suspected* nodes are frozen in place — a transient
+        failure verdict must not bleed budget that would thrash back on
+        recovery (only removal folds a partition's budget away for good).
         Returns the number of tenants whose partitions were resized."""
-        return sum(int(r.rebalance(t.cache))
+        detector = getattr(self.store, "detector", None)
+        suspended = detector.suspects() if detector is not None else ()
+        return sum(int(r.rebalance(t.cache, suspended=suspended))
                    for r, t in zip(self.rebalancers, self.tenants))
 
     # -- driving -----------------------------------------------------------

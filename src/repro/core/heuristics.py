@@ -19,7 +19,6 @@ The three strategies, conservative → progressive:
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Optional
 
 from .ptree import PNode, PTree, PTreeIndex
 

@@ -97,6 +97,10 @@ class PalpatineClient:
         self._vb_cache: dict = {}
         self._last_mine_events: Optional[int] = None
         self._last_mine_generation: Optional[int] = None
+        #: demand reads that paid >= 1 replica ack timeout before landing
+        #: (the client-visible cost of not-yet-suspected crashed replicas:
+        #: non-zero only during the failure detector's discovery window)
+        self.demand_timeouts = 0
         store.watch(self._on_store_write)
         self._in_write = False
 
@@ -111,6 +115,8 @@ class PalpatineClient:
             value, lat = self.store.get(key)
             return value, now + lat
         fut = get_async(key, now)
+        if getattr(fut, "timed_out", False):
+            self.demand_timeouts += 1
         return fut.value(), fut.done_at
 
     def read(self, container) -> tuple[Any, float]:
@@ -181,6 +187,8 @@ class PalpatineClient:
             else:
                 fut = multi_async(keys, now)
                 vals, batch_done = fut.result()
+                if getattr(fut, "timed_out", False):
+                    self.demand_timeouts += 1
             for (pos, iid, _), v in zip(misses, vals):
                 values[pos] = v
                 if v is not None:

@@ -10,7 +10,7 @@ store (table, row, column family:qualifier, or any combination).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Iterator, Optional, Sequence
+from typing import Iterable, Optional, Sequence
 
 import numpy as np
 

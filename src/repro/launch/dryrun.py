@@ -23,7 +23,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import dataclasses
-import functools
 import json
 import time
 import traceback

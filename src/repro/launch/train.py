@@ -13,13 +13,11 @@ crash-restart (``--inject-failure-at`` proves the loop recovers).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.data import DataConfig, TokenPipeline

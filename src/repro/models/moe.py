@@ -21,7 +21,6 @@ einsum itself, which the sharding rules place on the model/expert axis.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -48,7 +48,8 @@ def chunked_gla(q, k, v, log_f, log_i, chunk: int, state0=None):
     pad = (-s) % chunk
     if pad:
         # zero k/v leave the state untouched; log_f=0 means no decay
-        zpad = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        def zpad(x):
+            return jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
         q, k, v, log_f, log_i = map(zpad, (q, k, v, log_f, log_i))
         s = s + pad
     nc = s // chunk

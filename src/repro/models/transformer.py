@@ -22,7 +22,6 @@ shared attention block every 6 layers).
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +32,7 @@ from .layers import (
     dense_init, embed_init, gelu_mlp, mlp_init, norm_apply, norm_init,
     swiglu_mlp,
 )
-from .moe import moe_apply, moe_capacity, moe_init
+from .moe import moe_apply, moe_init
 
 __all__ = [
     "init_params", "param_shapes", "forward", "loss_fn",

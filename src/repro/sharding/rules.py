@@ -24,7 +24,6 @@ on 'data' instead (batch=1).
 from __future__ import annotations
 
 import re
-from typing import Any
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

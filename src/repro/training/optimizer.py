@@ -9,7 +9,6 @@ recipe.  Moment tensors inherit the parameter sharding (see
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +29,8 @@ class OptConfig:
 
 
 def adamw_init(params):
-    f32zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def f32zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {
         "m": jax.tree.map(f32zeros, params),
         "v": jax.tree.map(f32zeros, params),

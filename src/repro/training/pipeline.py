@@ -16,7 +16,6 @@ stack on fake devices) and the dry-run PP demo.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

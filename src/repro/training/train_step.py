@@ -12,7 +12,6 @@ before the cross-pod reduction (see `training/compression.py`).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -89,3 +89,18 @@ def test_prefetch_skips_already_cached():
     c.put_demand("k", b"v", 1)
     assert not c.put_prefetch("k", b"v", 1, 0.0)
     assert c.stats.prefetches == 0
+
+
+def test_oversized_replacement_never_serves_the_stale_value():
+    """Replacing an entry with a value too big to cache must still drop
+    the superseded entry: keeping it would serve stale data on the next
+    lookup (write-through coherence, §4.4)."""
+    s = LRUSpace(10)
+    s.put("k", _Entry(b"old", 3))
+    assert s.put("k", _Entry(b"huge", 50)) == []
+    assert "k" not in s and s.used == 0
+
+    c = TwoSpaceCache(100, 0.1)
+    c.put_demand("k", b"old", 10)
+    c.write("k", b"n" * 600, 600)          # larger than the whole budget
+    assert c.lookup("k") is None           # miss, not the superseded value

@@ -15,7 +15,7 @@ Semantics under test:
 import numpy as np
 import pytest
 
-from repro.core import ALGORITHMS, MiningParams, Pattern, SequenceDatabase, brute_force
+from repro.core import ALGORITHMS, MiningParams, SequenceDatabase, brute_force
 from repro.core.mining import maximal_filter
 
 pytestmark = pytest.mark.tier1

@@ -8,7 +8,6 @@ import random
 import pytest
 
 from repro.core import (
-    CacheStats,
     PalpatineClient,
     PalpatineConfig,
     Pattern,

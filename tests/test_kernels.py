@@ -1,7 +1,6 @@
 """Per-kernel correctness: shape/dtype sweeps vs the pure-jnp oracles
 (interpret mode on CPU)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -10,8 +10,10 @@ from repro.core import (
     BudgetRebalancer,
     ClusterClient,
     ClusterConfig,
+    FailureDetector,
     HeuristicConfig,
     LatencyModel,
+    LeaseConflict,
     MiningParams,
     PalpatineConfig,
     ShardedDKVStore,
@@ -802,3 +804,457 @@ def test_cluster_serves_through_crash_write_rejoin_cycle():
     for s in store.replicas_of(key):
         assert store.shards[s].data[key] == b"while-down" * 4
     assert b.read(key)[0] == b"while-down" * 4
+
+
+# ---------------------------------------------------------------------------
+# Emergent failure detection: phi accrual, hysteresis, probe recovery
+# ---------------------------------------------------------------------------
+
+
+def test_detector_timeout_threshold_and_probe_clear():
+    det = FailureDetector()
+    assert not det.suspected(0) and det.phi(0) == 0.0
+    assert det.observe_timeout(0) is False         # one miss: not yet
+    assert det.observe_timeout(0) is True          # crossed the threshold
+    assert det.suspected(0) and det.suspicions == 1
+    assert det.observe_timeout(0) is False         # already suspected
+    # acks decay phi; the verdict clears only after clear_acks in a row
+    cleared = [det.observe_ack(0) for _ in range(6)]
+    assert any(cleared) and not det.suspected(0)
+    assert det.clears == 1 and det.phi(0) == 0.0
+
+
+def test_detector_late_acks_capped_inside_hysteresis_band():
+    """Even pathologically late acks (every single one beyond
+    slow_factor x EWMA) accrue only band-capped suspicion: slow-but-alive
+    never becomes a down verdict, by construction."""
+    det = FailureDetector()
+    det.observe_ack(3, 1.0)                        # seed the EWMA
+    peak = 0.0
+    service = 1.0
+    for _ in range(60):
+        service *= 10.0                            # always looks 'late'
+        det.observe_ack(3, service)
+        peak = max(peak, det.phi(3))
+    assert peak > 0.0                              # the band was exercised
+    assert peak <= det.suspect_phi - det.clear_phi
+    assert not det.suspected(3) and det.suspicions == 0
+
+
+def test_detector_validates_thresholds():
+    with pytest.raises(ValueError):
+        FailureDetector(suspect_phi=1.0, clear_phi=2.0)
+
+
+def test_crashed_node_suspected_within_bounded_ops():
+    """With detection on and NO set_down anywhere, a crashed node is
+    suspected from demand traffic alone, within
+    ceil(suspect_phi / timeout_phi) reads routed at it."""
+    store = make_store(3, replication=2, failure_detection=True)
+    victim = 0
+    primary = [k for k in all_keys() if store.replicas_of(k)[0] == victim]
+    store.shards[victim].crash()
+    bound = -(-int(store.detector.suspect_phi)
+              // int(store.detector.timeout_phi))
+    for i, k in enumerate(primary):
+        assert i <= bound, "verdict should have landed by now"
+        if store.detector.suspected(victim):
+            break
+        fut = store.get_async(k, now=float(i))
+        assert fut.value() == value_of(k)          # retried, never failed
+        assert fut.timed_out and fut.retries >= 1
+        assert fut.done_at - i >= store.rpc_timeout
+    assert store.detector.suspected(victim)
+    assert store.down == set()                     # emergent, not declared
+    # once suspected, reads route around it at full speed
+    fut = store.get_async(primary[-1], now=50.0)
+    assert not fut.timed_out and fut.retries == 0
+
+
+def test_slow_node_is_never_suspected():
+    """A 10x-slow node with heavy jitter and frequent long-tail stalls
+    acks everything late — the hysteresis band absorbs it; no verdict,
+    no flapping, across hundreds of ops."""
+    slow = LatencyModel(seed=5, jitter_sigma=0.4, stall_frac=0.05,
+                        stall_mult=10.0, rtt=5e-3, per_item_service=1.5e-3)
+    store = ShardedDKVStore(
+        3, latencies=[slow, flat_latency(1), flat_latency(2)],
+        replication=1, failure_detection=True)
+    store.load((k, value_of(k)) for k in all_keys())
+    on_slow = [k for k in all_keys() if store.shard_of(k) == 0]
+    t = 0.0
+    for rounds in range(6):
+        for k in on_slow:
+            fut = store.get_async(k, t)
+            t = fut.done_at + 1e-3
+    assert store.detector.suspicions == 0
+    assert not store.detector.suspected(0)
+    assert store.rpc_timeouts == 0
+
+
+def test_suspicion_clears_after_recovery_without_flapping():
+    """Virtual-clock determinism: crash -> bounded-ops suspicion ->
+    recovery -> probe acks clear the verdict -> no re-suspicion ever
+    after (exactly one suspicion, exactly one clear)."""
+    store = make_store(3, replication=2, failure_detection=True)
+    victim = 1
+    keys = [k for k in all_keys() if victim in store.replicas_of(k)]
+    store.shards[victim].crash()
+    i = 0
+    while not store.detector.suspected(victim):
+        store.get_async(keys[i % len(keys)], now=float(i))
+        i += 1
+        assert i < 50
+    store.shards[victim].recover()
+    j = 0
+    while store.detector.suspected(victim) and j < 400:
+        store.get_async(keys[j % len(keys)], now=100.0 + j)
+        j += 1
+    assert not store.detector.suspected(victim)
+    assert store.detector.probes if hasattr(store.detector, "probes") else True
+    # stability: hundreds more ops never flap the verdict back
+    for j in range(200):
+        store.get_async(keys[j % len(keys)], now=1000.0 + j)
+    assert store.detector.suspicions == 1
+    assert store.detector.clears == 1
+    assert store.probes > 0
+
+
+# ---------------------------------------------------------------------------
+# Sloppy quorums: writes hand off to ring successors, with per-key
+# hint ownership and hand-back on recovery
+# ---------------------------------------------------------------------------
+
+
+def test_sloppy_write_survives_sole_replica_crash():
+    store = make_store(3, replication=1, failure_detection=True,
+                       sloppy_quorum=True)
+    k = all_keys()[0]
+    owner = store.shard_of(k)
+    store.shards[owner].crash()
+    done = store.put(k, b"sloppy-solo" * 4, now=0.0)
+    assert done >= store.rpc_timeout        # paid the discovery timeout
+    assert store.sloppy_writes == 1
+    hint = store.hints.get_hint(owner, k)
+    assert hint is not None
+    holder = hint[2]
+    assert holder is not None and holder != owner
+    assert store.shards[holder].data[k] == b"sloppy-solo" * 4
+    # reads fall through to the sloppy holder while the owner is out
+    fut = store.get_async(k, now=1.0)
+    assert fut.value() == b"sloppy-solo" * 4
+    # hand-back: the owner converges, the holder's stray copy is pruned
+    store.shards[owner].recover()
+    assert store.set_down(owner, False, now=2.0) == 1
+    assert store.shards[owner].data[k] == b"sloppy-solo" * 4
+    assert k not in store.shards[holder].data
+
+
+def test_sloppy_quorum_counts_successor_acks_toward_w():
+    """W=2 with zero live preference replicas: both writes hand off to
+    distinct ring successors outside the preference list and the quorum
+    completes — then both owners converge byte-identically on rejoin."""
+    store = make_store(4, replication=2, write_mode="quorum",
+                       sloppy_quorum=True)
+    k = all_keys()[0]
+    r0, r1 = store.replicas_of(k)
+    store.set_down(r0)
+    store.set_down(r1)
+    store.put(k, b"sloppy-w" * 4, now=0.0)
+    holders = {store.hints.get_hint(r, k)[2] for r in (r0, r1)}
+    assert len(holders) == 2
+    assert holders.isdisjoint({r0, r1})
+    assert store.sloppy_writes == 2
+    fut = store.get_async(k, now=1.0)        # served by a holder
+    assert fut.value() == b"sloppy-w" * 4
+    store.set_down(r0, False, now=2.0)
+    store.set_down(r1, False, now=2.0)
+    for s in (r0, r1):
+        assert store.shards[s].data[k] == b"sloppy-w" * 4
+    copies = [s for s in range(store.n_shards) if k in store.shards[s].data]
+    assert sorted(copies) == sorted((r0, r1))  # strays handed back & pruned
+
+
+def test_sloppy_disabled_quorum_still_refuses_below_majority():
+    store = make_store(3, replication=2, write_mode="quorum")
+    k = all_keys()[0]
+    for s in store.replicas_of(k):
+        store.set_down(s)
+    with pytest.raises(KeyError):
+        store.put(k, b"refused" * 4, now=0.0)
+    assert len(store.hints) == 0
+
+
+def test_sloppy_hint_replacement_prunes_previous_holder():
+    """Consecutive sloppy writes to the same key keep only the newest
+    hint; a superseded hint's holder must not linger as a stray copy."""
+    store = make_store(4, replication=1, failure_detection=True,
+                       sloppy_quorum=True)
+    k = all_keys()[0]
+    owner = store.shard_of(k)
+    store.set_down(owner)
+    store.put(k, b"gen-1!" * 4, now=0.0)
+    first_holder = store.hints.get_hint(owner, k)[2]
+    # make the first holder unavailable too: the next write picks another
+    store.set_down(first_holder)
+    store.put(k, b"gen-2!" * 4, now=1.0)
+    second_holder = store.hints.get_hint(owner, k)[2]
+    assert second_holder not in (owner, first_holder)
+    assert store.hints.pending(owner) == 1      # latest-version dedup
+    store.set_down(owner, False, now=2.0)
+    assert store.shards[owner].data[k] == b"gen-2!" * 4
+    assert k not in store.shards[second_holder].data
+    store.set_down(first_holder, False, now=3.0)
+    copies = {s for s in range(store.n_shards) if k in store.shards[s].data}
+    assert copies == {owner}                    # no stray anywhere
+
+
+def test_emergent_crash_sloppy_quorum_rejoin_converges():
+    """The acceptance scenario, zero set_down calls: a crash is suspected
+    from traffic, quorum writes complete via sloppy successors, probes
+    clear the verdict on recovery, hints hand back, and every replica
+    ends byte-identical with no stray copies."""
+    store = make_store(4, replication=2, write_mode="quorum",
+                       failure_detection=True, sloppy_quorum=True)
+    victim = 0
+    primary = [k for k in all_keys() if store.replicas_of(k)[0] == victim]
+    store.shards[victim].crash()
+    i = 0
+    while not store.detector.suspected(victim):
+        store.get_async(primary[i], now=float(i))
+        i += 1
+        assert i < 10
+    written = primary[:10]
+    for n, k in enumerate(written):
+        store.put(k, f"sloppy-{n}".encode() * 4, now=100.0 + n)
+    assert store.sloppy_writes == len(written)
+    assert store.hints.pending(victim) == len(written)
+    for n, k in enumerate(written):
+        fut = store.get_async(k, now=200.0 + n)
+        assert fut.value() == f"sloppy-{n}".encode() * 4
+    store.shards[victim].recover()
+    j = 0
+    while store.detector.suspected(victim) and j < 400:
+        store.get_async(all_keys()[j % 100], now=300.0 + j)
+        j += 1
+    assert not store.detector.suspected(victim)
+    assert store.hints.pending(victim) == 0
+    for n, k in enumerate(written):
+        expect = f"sloppy-{n}".encode() * 4
+        for s in store.replicas_of(k):
+            assert store.shards[s].data[k] == expect
+        copies = [s for s in range(store.n_shards)
+                  if k in store.shards[s].data]
+        assert sorted(copies) == sorted(store.replicas_of(k))
+    assert store.down == set()                  # nothing was ever declared
+
+
+def test_cluster_client_rides_through_emergent_crash():
+    """Tenants keep reading correct values straight through an undeclared
+    crash: the discovery window costs timeouts (client-visible counter),
+    the verdict lands, and recovery clears it — all from traffic."""
+    store = make_store(3, replication=2, failure_detection=True,
+                       sloppy_quorum=True)
+    cluster = ClusterClient(store, ClusterConfig(
+        n_clients=2, palpatine=small_palpatine(),
+        rebalance_every_ops=200))
+    cluster.run([stream(700 + t, n_sessions=40) for t in range(2)])
+    victim = 1
+    store.shards[victim].crash()
+    _, vals = cluster.run([stream(720 + t, n_sessions=60) for t in range(2)],
+                          collect_values=True)
+    for tenant_vals, tenant_stream in zip(
+            vals, [stream(720 + t, 60) for t in range(2)]):
+        expected = [value_of(k) for sess in tenant_stream for k in sess]
+        assert tenant_vals == expected
+    assert store.detector.suspected(victim)
+    assert sum(t.demand_timeouts for t in cluster.tenants) > 0
+    store.shards[victim].recover()
+    cluster.run([stream(740 + t, n_sessions=80) for t in range(2)])
+    assert not store.detector.suspected(victim)
+    assert store.detector.suspicions == 1
+
+
+def test_rebalancer_freezes_suspected_partition():
+    """A suspected node's partition budget is frozen — not bled away by
+    the traffic collapse of its down window — and re-enters the split
+    when the suspicion clears."""
+    cache = _sharded_cache(3, total=9_000)
+    rb = BudgetRebalancer(hysteresis=0.01, smoothing=1.0)
+    for _ in range(100):
+        cache.lookup(0)
+    for _ in range(40):
+        cache.lookup(1)
+    before = cache.budgets()
+    assert rb.rebalance(cache, suspended={2}) is True
+    b = cache.budgets()
+    assert b[2] == before[2]                   # frozen in place
+    assert sum(b) == sum(before)               # conserved
+    assert b[0] > b[1]
+    # verdict cleared: the partition participates again
+    for _ in range(600):
+        cache.lookup(2)
+    assert rb.rebalance(cache) is True
+    assert cache.budgets()[2] > b[2]
+
+
+# ---------------------------------------------------------------------------
+# Range-transfer leases: concurrent membership changes
+# ---------------------------------------------------------------------------
+
+
+def _partition_keys_by_transition(n_candidates=800):
+    """Candidate keys split by which ring transition moves them:
+    2->3 nodes only, 3->4 nodes only, both, neither (R=1 scratch rings)."""
+    rings = [ShardedDKVStore(n, latencies=[flat_latency(i) for i in range(n)],
+                             replication=1) for n in (2, 3, 4)]
+    cand = [("t", f"k{i}", "c") for i in range(n_candidates)]
+    m23 = {k for k in cand if rings[0].replicas_of(k) != rings[1].replicas_of(k)}
+    m34 = {k for k in cand if rings[1].replicas_of(k) != rings[2].replicas_of(k)}
+    only23 = [k for k in cand if k in m23 and k not in m34]
+    only34 = [k for k in cand if k in m34 and k not in m23]
+    both = [k for k in cand if k in m23 and k in m34]
+    return only23, only34, both, rings[2]
+
+
+def test_concurrent_disjoint_membership_changes_admitted():
+    """Two overlapping add_node calls (the second issued mid-stream from
+    the first's on_batch) run concurrently under disjoint leases; the
+    final ring, placements, and data all match a fresh 4-node ring."""
+    only23, only34, _, fresh = _partition_keys_by_transition()
+    assert only23 and only34
+    keys = only23 + only34
+    store = ShardedDKVStore(2, latencies=[flat_latency(i) for i in range(2)],
+                            replication=1)
+    store.load((k, value_of(k)) for k in keys)
+    nested = []
+
+    def on_batch(t):
+        if not nested:
+            nested.append(store.add_node(latency=flat_latency(3), now=t))
+
+    outer = store.add_node(latency=flat_latency(2), now=0.0,
+                           on_batch=on_batch)
+    assert nested, "the inner join must have been admitted mid-stream"
+    assert store.leases.granted == 2 and store.leases.rejected == 0
+    assert len(store.leases) == 0              # all released at cutover
+    assert store.n_shards == 4
+    assert outer.keys_streamed > 0 and nested[0].keys_streamed > 0
+    for k in keys:
+        assert store.replicas_of(k) == fresh.replicas_of(k)
+        assert store.get(k)[0] == value_of(k)
+        copies = [s for s in range(store.n_shards)
+                  if k in store.shards[s].data]
+        assert copies == sorted(store.replicas_of(k))
+
+
+def test_lease_conflict_rejects_overlapping_change_without_side_effects():
+    """A nested change whose owed ranges overlap the in-flight one raises
+    LeaseConflict and rolls back completely: the outer move finishes
+    untouched and the rejected node never joins."""
+    only23, only34, both, _ = _partition_keys_by_transition()
+    assert both, "need keys moved by both transitions"
+    store = ShardedDKVStore(2, latencies=[flat_latency(i) for i in range(2)],
+                            replication=1)
+    keys = both + only23
+    store.load((k, value_of(k)) for k in keys)
+    caught = []
+
+    def on_batch(t):
+        if not caught:
+            try:
+                store.add_node(latency=flat_latency(3), now=t)
+            except LeaseConflict as e:
+                caught.append(e)
+
+    store.add_node(latency=flat_latency(2), now=0.0, on_batch=on_batch)
+    assert caught, "the overlapping inner join must have been rejected"
+    assert store.leases.rejected == 1
+    assert store.n_shards == 3                 # inner join rolled back
+    three = ShardedDKVStore(3, latencies=[flat_latency(i) for i in range(3)],
+                            replication=1)
+    for k in keys:
+        assert store.replicas_of(k) == three.replicas_of(k)
+        assert store.get(k)[0] == value_of(k)
+
+
+def test_removing_the_joining_node_mid_move_conflicts():
+    store = make_store(2, replication=1)
+    caught = []
+
+    def on_batch(t):
+        if not caught:
+            try:
+                store.remove_node(2, now=t)    # the node mid-join
+            except LeaseConflict as e:
+                caught.append(e)
+
+    store.add_node(latency=flat_latency(2), now=0.0, on_batch=on_batch)
+    assert caught
+    assert store.removed == set()              # rollback left no trace
+    assert store.n_shards == 3
+    for k in all_keys():
+        assert store.get(k)[0] == value_of(k)
+
+
+def test_uncaught_nested_conflict_leaks_no_lease_state():
+    """A nested LeaseConflict the on_batch does NOT catch aborts the
+    outer change too — but must release every lease and pending ring:
+    the store stays fully writable and a later join succeeds."""
+    only23, only34, both, _ = _partition_keys_by_transition()
+    store = ShardedDKVStore(2, latencies=[flat_latency(i) for i in range(2)],
+                            replication=1)
+    keys = both + only23
+    store.load((k, value_of(k)) for k in keys)
+
+    def on_batch(t):
+        store.add_node(latency=flat_latency(3), now=t)   # no try/except
+
+    with pytest.raises(LeaseConflict):
+        store.add_node(latency=flat_latency(2), now=0.0, on_batch=on_batch)
+    assert len(store.leases) == 0          # nothing held
+    assert store.n_shards == 2             # both joins rolled back
+    assert store._pending_rings == [] and store._membership_depth == 0
+    store.put(keys[0], b"still-writable" * 4, now=1.0)
+    assert store.get(keys[0])[0] == b"still-writable" * 4
+    report = store.add_node(latency=flat_latency(2), now=2.0)  # works again
+    assert report.lost_keys == 0
+    for k in keys[:50]:
+        assert store.get(k)[0] is not None
+
+
+def test_declared_down_quorum_read_pays_no_timeout():
+    """A quorum left short by a *declared*-down replica waited on
+    nothing: neither the single nor the batched read may be floored at
+    rpc_timeout (only real crashes cost the discovery window)."""
+    store = make_store(3, replication=2, read_quorum=2)
+    k = all_keys()[0]
+    store.set_down(store.replicas_of(k)[1])
+    fut = store.get_async(k, now=1.0)
+    assert fut.value() == value_of(k)
+    assert fut.done_at - 1.0 < store.rpc_timeout / 2
+    bfut = store.multi_get_async([k], now=5.0)
+    assert bfut.values == [value_of(k)]
+    assert bfut.done_each[0] - 5.0 < store.rpc_timeout / 2
+
+
+def test_quorum_reads_fall_through_to_sloppy_holders():
+    """During the discovery window (both preference replicas crashed,
+    nothing suspected yet) a quorum read must serve the sloppy holders'
+    copies — and pay the timeout the coordinator really waited."""
+    store = make_store(4, replication=2, read_quorum=2,
+                       write_mode="quorum", failure_detection=True,
+                       sloppy_quorum=True)
+    k = all_keys()[0]
+    for s in store.replicas_of(k):
+        store.shards[s].crash()
+    store.put(k, b"holder-only" * 4, now=0.0)      # quorum via successors
+    assert store.sloppy_writes == 2
+    bfut = store.multi_get_async([k], now=1.0)     # still in discovery
+    assert bfut.values == [b"holder-only" * 4]
+    assert bfut.done_each[0] - 1.0 >= store.rpc_timeout  # waited the crashes
+    # the put + batched read each missed both replicas' acks: the verdict
+    # has landed, so the next quorum read goes straight to the holders
+    fut = store.get_async(k, now=10.0)
+    assert fut.value() == b"holder-only" * 4
+    assert fut.done_at - 10.0 < store.rpc_timeout / 2

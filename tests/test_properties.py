@@ -6,7 +6,6 @@ deterministic randomized equivalents live in test_differential.py and
 test_invariants.py and always run.
 """
 
-import dataclasses
 
 import numpy as np
 import pytest

@@ -10,7 +10,7 @@ import pytest
 
 from repro.configs import get_config, reduced
 from repro.data import DataConfig, TokenPipeline
-from repro.launch.train import SimulatedFailure, TrainLoop, run_with_restarts
+from repro.launch.train import TrainLoop, run_with_restarts
 from repro.training.checkpoint import latest_step, restore, save
 from repro.training.compression import compress, decompress
 from repro.training.optimizer import OptConfig, adamw_init, adamw_update, lr_at

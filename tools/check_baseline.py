@@ -11,6 +11,7 @@ Usage:  PYTHONPATH=src python tools/check_baseline.py [extra pytest args]
 
 from __future__ import annotations
 
+import os
 import re
 import subprocess
 import sys
@@ -25,10 +26,32 @@ BASELINE_ERRORS = 0
 # frontier kernel parity sweeps, and the padding-leak invariant; PR 4
 # added the membership/anti-entropy suite (ring scaling, hinted handoff,
 # read-repair, write quorum, budget rebalancing), the gossip edge cases,
-# and the maxgap=None candidate-narrowing differentials.  Ratchet UP as
-# suites grow, so green tests stay protected.
+# and the maxgap=None candidate-narrowing differentials; PR 5 added the
+# failure-detection suite (phi accrual, hysteresis, probe recovery),
+# sloppy quorums with hint hand-back, and the range-transfer lease tests.
+# Ratchet UP as suites grow, so green tests stay protected.
 # (tests/test_properties.py skips without hypothesis in both counts.)
-BASELINE_PASSED = 493
+BASELINE_PASSED = 513
+
+
+def write_step_summary(passed: int, failed: int, errors: int,
+                       ok: bool) -> None:
+    """Append the baseline verdict to ``$GITHUB_STEP_SUMMARY`` when CI
+    sets it, so the counts land on the PR's job summary page."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    verdict = "✅ baseline OK" if ok else "❌ baseline regression"
+    with open(path, "a") as fh:
+        fh.write("\n".join([
+            "## full-suite baseline", "",
+            f"**{verdict}**", "",
+            "| | passed | failed | errors |",
+            "|---|---:|---:|---:|",
+            f"| this run | {passed} | {failed} | {errors} |",
+            f"| baseline | {BASELINE_PASSED} (floor) | {BASELINE_FAILED} "
+            f"(ceiling) | {BASELINE_ERRORS} (ceiling) |",
+        ]) + "\n\n")
 
 
 def main() -> int:
@@ -55,6 +78,7 @@ def main() -> int:
         ok = False
     if ok:
         print("baseline check OK")
+    write_step_summary(passed, failed, errors, ok)
     return 0 if ok else 1
 
 
