@@ -1,10 +1,29 @@
-"""Paper Fig 18: overhead with cache size 0.
+"""Paper Fig 18 + ROADMAP item 2: client-side overhead.
 
-PALPATINE's full work flow (interception, logging, tree matching, prefetch
-bookkeeping) stays on, but the cache admits nothing — replaying the *same*
-session stream through the unmodified client and through PALPATINE isolates
-the client-side overhead.  Both passes are warmed and repeated (median);
-the paper reports -5%..+7% for this experiment and reads it as noise.
+Two sweeps:
+
+* ``overhead_client_*`` — the paper's Fig 18 experiment: PALPATINE's full
+  work flow (interception, logging, tree matching, prefetch bookkeeping)
+  with cache size 0, replayed against the unmodified client on the same
+  session stream.  The paper reports -5%..+7% and reads it as noise.
+* ``overhead_decision_*`` — the per-op prefetch-decision cost at 1/16/64
+  live contexts, scalar oracle vs the vectorized array engine, on a
+  sliding-window chain forest that keeps exactly ``ctx`` contexts alive
+  and advancing every op.  This is the hot path ROADMAP open item 2
+  tracks: scalar cost grows linearly with live contexts, the batched
+  walk stays ~flat.  ``overhead_speedup_ctx{N}`` records the ratio.
+
+CLI::
+
+    python -m benchmarks.bench_overhead --quick \
+        --check BENCH_overhead.json --out BENCH_overhead.json
+
+The CI perf-smoke gate sums the ``overhead_decision_*`` timings against
+the committed numbers (>2x total = regression) and additionally enforces
+the absolute ``overhead_speedup_ctx64 >= 5`` floor — the vectorized
+engine must stay at least 5x cheaper than the oracle at 64 live
+contexts, fresh-run measured, not grandfathered.  (This module must stay
+importable without jax: perf-smoke installs numpy only.)
 """
 
 from __future__ import annotations
@@ -15,11 +34,13 @@ import numpy as np
 
 from repro.core import (
     BaselineClient, HeuristicConfig, MiningParams, PalpatineClient,
-    PalpatineConfig,
+    PalpatineConfig, Pattern, PTreeIndex, build_engine,
 )
 
-from .common import row
+from .common import bench_cli, row, sum_gate
 from .workloads import SEQB, SEQBConfig
+
+SPEEDUP_FLOOR_CTX64 = 5.0
 
 
 def _median_wall(fn, reps):
@@ -32,14 +53,84 @@ def _median_wall(fn, reps):
     return float(np.median(walls))
 
 
-def main(quick: bool = True):
+# ---------------------------------------------------------------------------
+# per-op decision cost (scalar vs vectorized) at a held context count
+# ---------------------------------------------------------------------------
+
+
+def chain_forest(window: int, length: int, fanout: int = 4):
+    """A forest that holds exactly ``window`` live contexts in steady
+    state: item ``i`` roots a tree over the chain window ``i..i+window``,
+    so replaying the chain opens one context per op and reaps one (at its
+    leaf) per op.  Every chain node also carries ``fanout`` decoy
+    children (ids above the chain, never requested) so waves have real
+    width — prefetch emission, not just the walk, is under test."""
+    pats = []
+    decoy = length
+    for i in range(length - window):
+        chain = tuple(range(i, i + window + 1))
+        pats.append(Pattern(chain, 64))
+        for d in range(1, window + 1):
+            for f in range(fanout):
+                pats.append(Pattern(chain[:d] + (decoy,), 1))
+                decoy += 1
+    return PTreeIndex.build(pats)
+
+
+def _decision_pass(engine, index, stream, steady_from):
+    """Replay ``stream``; return wall seconds spent in the steady segment
+    (every live context advances and one opens per op)."""
+    engine.replace_index(index)  # reset contexts, same generation arrays
+    for item in stream[:steady_from]:
+        engine.on_request(item)
+    t0 = time.perf_counter()
+    for item in stream[steady_from:]:
+        engine.on_request(item)
+    return time.perf_counter() - t0
+
+
+def bench_decision(results: dict, quick: bool) -> None:
+    reps = 3 if quick else 5
+    tail = 64 if quick else 256
+    for window in (1, 16, 64):
+        length = window + tail
+        index = chain_forest(window, length)
+        stream = list(range(length))
+        steady = window + 1
+        n_ops = len(stream) - steady
+        cfg = HeuristicConfig("fetch_progressive", progressive_depth=3)
+        us = {}
+        for label, vec in (("scalar", False), ("vectorized", True)):
+            eng = build_engine(index, cfg, max_contexts=256,
+                               use_vectorized=vec)
+            wall = _median_wall(
+                lambda e=eng: _decision_pass(e, index, stream, steady),
+                reps)
+            us[label] = wall * 1e6 / n_ops
+            name = f"overhead_decision_{label}_ctx{window}_us"
+            results[name] = us[label]
+            row(name, us[label], live_contexts=window, n_ops=n_ops,
+                n_trees=len(index))
+        name = f"overhead_speedup_ctx{window}"
+        results[name] = us["scalar"] / max(us["vectorized"], 1e-9)
+        row(name, results[name], speedup_x=results[name])
+
+
+# ---------------------------------------------------------------------------
+# paper Fig 18: whole-client overhead with cache size 0
+# ---------------------------------------------------------------------------
+
+
+def bench_client(results: dict, quick: bool) -> None:
     n_sessions = 300 if quick else 1_000
     reps = 3 if quick else 5
-    for exp in (0.5, 1.0, 2.0):
+    exps = (1.0,) if quick else (0.5, 1.0, 2.0)
+    for exp in exps:
         seqb = SEQB(SEQBConfig(zipf_exp=exp, n_sessions=n_sessions,
                                n_blocks=30_000))
         store = seqb.make_store()
         stream = [list(s) for s in seqb.sessions(np.random.default_rng(2))]
+        n_ops = sum(len(s_) for s_ in stream)
 
         def base_pass():
             client = BaselineClient(store)
@@ -68,17 +159,44 @@ def main(quick: bool = True):
                     pal.logger.flush_session()
 
             pal_wall = _median_wall(pal_pass, reps)
-            n_ops = sum(len(s_) for s_ in stream)
             over_us = (pal_wall - base_wall) * 1e6 / max(n_ops, 1)
             # the op itself is a ~670us store round trip in deployment;
             # client-side bookkeeping is judged against that (paper Fig 18)
             op_us = 670.0
-            row(f"overhead_exp{exp}_{h}",
-                pal_wall * 1e6 / max(n_ops, 1),
+            name = f"overhead_client_exp{exp}_{h}_us"
+            results[name] = pal_wall * 1e6 / max(n_ops, 1)
+            row(name, results[name],
                 palpatine_wall_s=pal_wall, baseline_wall_s=base_wall,
                 overhead_us_per_op=over_us,
                 overhead_pct_of_op=100.0 * over_us / op_us)
 
 
+def main(quick: bool = True) -> dict:
+    results: dict = {}
+    bench_decision(results, quick)
+    bench_client(results, quick)
+    return results
+
+
+def check(results: dict, committed: dict, max_regression: float) -> list[str]:
+    """Perf gate: the decision-path timings gate on their *sum* (absolute
+    per-key numbers swing on shared runners; a real regression moves the
+    total), and the 64-context speedup has an absolute floor — the whole
+    point of the vectorized engine.  The client-overhead rows are
+    recorded but not gated: the paper itself reads them as noise."""
+    failures = sum_gate(
+        results, committed,
+        lambda k: k.startswith("overhead_decision_") and k.endswith("_us"),
+        max_regression, "decision us/op")
+    speedup = results.get("overhead_speedup_ctx64")
+    if not isinstance(speedup, (int, float)) or \
+            speedup < SPEEDUP_FLOOR_CTX64:
+        failures.append(
+            f"overhead_speedup_ctx64 = {speedup} < floor "
+            f"{SPEEDUP_FLOOR_CTX64} (vectorized engine must stay >=5x "
+            f"cheaper than the scalar oracle at 64 live contexts)")
+    return failures
+
+
 if __name__ == "__main__":
-    main(quick=False)
+    bench_cli(__doc__, main, check)

@@ -16,6 +16,7 @@ from .cluster import (
     ShardedDKVStore,
     ShardedTwoSpaceCache,
 )
+from .decision import VectorizedPrefetchEngine, build_engine
 from .heuristics import HEURISTICS, HeuristicConfig, PrefetchEngine
 from .membership import (
     BudgetRebalancer,
@@ -39,14 +40,15 @@ from .mining import (
     mine_dynamic_minsup,
 )
 from .palpatine import BaselineClient, PalpatineClient, PalpatineConfig
-from .ptree import PTree, PTreeIndex
+from .ptree import FlatForest, PTree, PTreeIndex
 from .sessions import AccessLogger, Container, SequenceDatabase
 
 __all__ = [
     "AccessLogger", "ALGORITHMS", "BITMAP_ALGOS", "BaselineClient",
     "BudgetRebalancer",
     "CacheStats", "Channel",
-    "Clock", "FailureDetector", "HintedHandoffLog", "LeaseConflict",
+    "Clock", "FailureDetector", "FlatForest", "HintedHandoffLog",
+    "LeaseConflict",
     "LeaseTable", "MembershipEvent", "MoveReport", "RangeLease",
     "RPCFuture",
     "ClusterBaseline", "ClusterClient", "ClusterConfig", "Container",
@@ -55,5 +57,6 @@ __all__ = [
     "PalpatineClient", "PalpatineConfig", "PrefetchEngine", "PTree",
     "PTreeIndex", "SequenceDatabase", "ShardedDKVStore",
     "ShardedTwoSpaceCache", "SimulatedDKVStore", "TwoSpaceCache",
-    "VerticalBitmaps", "brute_force", "mine", "mine_dynamic_minsup",
+    "VectorizedPrefetchEngine", "VerticalBitmaps", "brute_force",
+    "build_engine", "mine", "mine_dynamic_minsup",
 ]

@@ -15,7 +15,8 @@ from typing import Any, Optional, Sequence
 
 from .backstore import Clock, SimulatedDKVStore
 from .cache import TwoSpaceCache
-from .heuristics import HeuristicConfig, PrefetchEngine
+from .decision import build_engine
+from .heuristics import HeuristicConfig
 from .metastore import PatternMetastore
 from .mining import (
     BITMAP_ALGOS,
@@ -57,6 +58,11 @@ class PalpatineConfig:
     # predictions are instantiated with the triggering request's row
     # ("a sequence of table and columns that are accessed for a given row")
     column_mining: bool = False
+    # prefetch decisions: the vectorized array engine walks all live
+    # contexts in one batched program per request (flat per-op cost as
+    # contexts multiply); False falls back to the scalar per-context
+    # tree-walk oracle — the two are differentially identical
+    use_vectorized: bool = True
     # online mining (§4.2): re-mine every N logged operations (None = offline)
     online_mine_every: Optional[int] = None
     online_tail_sessions: int = 2_000             # mine recent chunk only
@@ -81,14 +87,16 @@ class PalpatineClient:
                       TwoSpaceCache(self.cfg.cache_bytes, self.cfg.preemptive_frac))
         self.metastore = PatternMetastore(self.cfg.metastore_capacity,
                                           self.cfg.mining.max_len)
-        self.engine = PrefetchEngine(PTreeIndex.build([]), self.cfg.heuristic)
+        self.engine = build_engine(PTreeIndex.build([]), self.cfg.heuristic,
+                                   use_vectorized=self.cfg.use_vectorized)
         self.col_logger = AccessLogger(self.cfg.session_gap)
         # column patterns are instantiated with the *current* request's row,
         # so they are always walked progressively (one confirmed step ->
         # next level), regardless of the main heuristic
-        self.col_engine = PrefetchEngine(
+        self.col_engine = build_engine(
             PTreeIndex.build([]),
-            HeuristicConfig("fetch_progressive", progressive_depth=2))
+            HeuristicConfig("fetch_progressive", progressive_depth=2),
+            use_vectorized=self.cfg.use_vectorized)
         self.col_metastore: Optional[PatternMetastore] = None
         self._ops_since_mine = 0
         self.mining_runs = 0

@@ -1,0 +1,86 @@
+"""Jitted prefetch-decision walk (the accelerator twin of
+:mod:`repro.core.decision`).
+
+One XLA program advances every live prefetch context by the requested
+item — a probability-matrix walk over the flattened pattern forest:
+
+* the edge table (sorted ``parent * item_stride + item`` keys) resolves
+  all C confirmed positions with one ``searchsorted``;
+* wave selection broadcasts each emitting context's depth band and DFS
+  preorder interval against the whole node table, yielding a dense
+  (C, N) wave mask whose row-major nonzeros are exactly the scalar
+  engine's (context order, level order) emission;
+* :func:`top_k_frontier` is the jitted top-k frontier selection used for
+  ``fetch_top_n`` initial waves (stable lexicographic (cum_prob desc,
+  depth asc, level-order asc) pick, re-emitted (depth asc, cum desc)).
+
+Shapes are static per mining generation (N nodes, E edges, C =
+``max_contexts``), so each generation compiles once.  The numpy
+reference in :mod:`.ref` delegates to the core engine's pure step
+functions; ``tests/test_decision_kernel.py`` pins jit-vs-reference
+parity.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decision_walk_step", "top_k_frontier"]
+
+
+@partial(jax.jit,
+         static_argnames=("p_depth", "item_stride", "depth_stride"))
+def decision_walk_step(edge_keys, edge_child, items, depth, pre, post,
+                       n_children, tree_start, tree_max_depth, level_key,
+                       nodes, trees, fetched, stamps, alive, item, op,
+                       *, p_depth: int, item_stride: int,
+                       depth_stride: int):
+    """Advance C (padded) contexts by ``item``; returns the new context
+    state plus the dense (C, N) wave mask.
+
+    Dead/padding rows carry ``alive=False`` and never match, emit, or
+    resurrect — zero-padding is decision-neutral, mirroring the
+    support-neutral padding contract of ``frontier_join_support``."""
+    keys = nodes * item_stride + item
+    pos = jnp.searchsorted(edge_keys, keys)
+    posc = jnp.clip(pos, 0, edge_keys.shape[0] - 1)
+    in_vocab = (item >= 0) & (item < item_stride)
+    found = alive & in_vocab & (edge_keys[posc] == keys)
+    child = edge_child[posc]
+    roots = tree_start[trees]
+    stay = (alive & in_vocab & ~found & (nodes == roots)
+            & (items[nodes] == item))
+    new_nodes = jnp.where(found, child, nodes)
+    cdepth = depth[new_nodes]
+    target = cdepth + p_depth
+    emit = found & (target > fetched)
+    dies_after = found & ((cdepth >= tree_max_depth[trees])
+                          | (n_children[new_nodes] == 0))
+    new_alive = (found & ~dies_after) | stay
+    new_fetched = jnp.where(emit, target, fetched)
+    new_stamps = jnp.where(found | stay, op, stamps)
+    lo = (trees * depth_stride + fetched + 1)[:, None]
+    hi = (trees * depth_stride + target)[:, None]
+    band = (level_key[None, :] >= lo) & (level_key[None, :] <= hi)
+    sub = ((pre[None, :] >= pre[new_nodes][:, None])
+           & (pre[None, :] < post[new_nodes][:, None]))
+    wave_mask = band & sub & emit[:, None]
+    return (new_nodes, new_fetched, new_stamps, new_alive, found, stay,
+            wave_mask)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def top_k_frontier(cum_prob, depth, *, k: int):
+    """Top-k frontier of one tree's non-root slice: select by (cum_prob
+    desc, depth asc, level-order asc), emit by (depth asc, cum_prob
+    desc, selection order) — both stable, the oracle's ``heapq.nlargest``
+    + stable-sort contract."""
+    ids = jnp.arange(cum_prob.shape[0])
+    order = jnp.lexsort((ids, depth, -cum_prob))
+    sel = order[:k]
+    fin = jnp.lexsort((jnp.arange(sel.shape[0]), -cum_prob[sel],
+                       depth[sel]))
+    return sel[fin]

@@ -1,0 +1,89 @@
+"""Public wrappers for the jitted decision walk.
+
+``device_forest`` ships one mining generation's :class:`FlatForest` to
+the device (empty edge tables get an unmatchable sentinel so the jitted
+``searchsorted`` stays shape-safe); ``decision_walk`` pads the live
+context state to the engine's ``max_contexts`` — keeping every shape
+static per generation, one compile each — runs the jitted step, and
+unpads back to the compact numpy state dict the core engine consumes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .decision_walk import decision_walk_step, top_k_frontier
+
+__all__ = ["device_forest", "decision_walk", "top_k_frontier"]
+
+_SENTINEL = np.iinfo(np.int64).max
+
+
+class DeviceForest:
+    """Per-generation device-resident FlatForest arrays."""
+
+    def __init__(self, flat):
+        ek = flat.edge_keys
+        ec = flat.edge_child
+        if ek.size == 0:
+            ek = np.array([_SENTINEL], np.int64)
+            ec = np.zeros(1, np.int64)
+        self.edge_keys = jnp.asarray(ek)
+        self.edge_child = jnp.asarray(ec)
+        self.items = jnp.asarray(flat.items)
+        self.depth = jnp.asarray(flat.depth)
+        self.pre = jnp.asarray(flat.pre)
+        self.post = jnp.asarray(flat.post)
+        self.n_children = jnp.asarray(flat.n_children)
+        self.tree_start = jnp.asarray(flat.tree_start)
+        self.tree_max_depth = jnp.asarray(flat.tree_max_depth)
+        self.level_key = jnp.asarray(flat.level_key)
+
+
+def device_forest(flat) -> DeviceForest:
+    return DeviceForest(flat)
+
+
+def decision_walk(jf: DeviceForest, flat, nodes, trees, fetched,
+                  item: int, p_depth: int,
+                  max_contexts: int | None = None) -> dict:
+    """Advance the ``n`` live contexts by ``item`` on the jitted path.
+
+    Returns the same state dict as :func:`repro.core.decision.
+    advance_step`, plus the already-selected ``wave_nodes`` (row-major
+    nonzeros of the dense wave mask = the scalar engine's context-major,
+    level-ordered emission)."""
+    n = len(nodes)
+    if flat.n_nodes == 0:
+        # zero-node forest: nothing to gather against — every context is
+        # dead by construction (none could have been opened)
+        z = np.zeros(n, np.int64)
+        f = np.zeros(n, bool)
+        return {"found": f, "stay": f.copy(), "nodes": z,
+                "alive": f.copy(), "fetched": z.copy(),
+                "wave_nodes": np.empty(0, np.int64)}
+    c = max_contexts or max(n, 1)
+    pad = c - n
+
+    def _ctx(a, fill=0):
+        a = np.asarray(a, np.int64)
+        return jnp.asarray(np.pad(a, (0, pad), constant_values=fill))
+
+    alive = np.zeros(c, bool)
+    alive[:n] = True
+    out = decision_walk_step(
+        jf.edge_keys, jf.edge_child, jf.items, jf.depth, jf.pre, jf.post,
+        jf.n_children, jf.tree_start, jf.tree_max_depth, jf.level_key,
+        _ctx(nodes), _ctx(trees), _ctx(fetched),
+        _ctx(np.zeros(n, np.int64)), jnp.asarray(alive), item, 0,
+        p_depth=p_depth, item_stride=flat.item_stride,
+        depth_stride=flat.depth_stride)
+    new_nodes, new_fetched, _, new_alive, found, stay, mask = (
+        np.asarray(o) for o in out)
+    _, wave_nodes = np.nonzero(mask[:n])
+    return {
+        "found": found[:n], "stay": stay[:n], "nodes": new_nodes[:n],
+        "alive": new_alive[:n], "fetched": new_fetched[:n],
+        "wave_nodes": wave_nodes.astype(np.int64),
+    }

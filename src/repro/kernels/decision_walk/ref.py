@@ -1,0 +1,33 @@
+"""Numpy reference for the jitted decision walk.
+
+Delegates to the core engine's pure step functions — the same code the
+tier-1 differential suite pins against the scalar oracle — re-shaped to
+the ops-level contract so kernel parity tests compare like with like.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.decision import advance_step, wave_select
+
+__all__ = ["decision_walk_ref"]
+
+
+def decision_walk_ref(flat, nodes, trees, fetched, item: int,
+                      p_depth: int) -> dict:
+    """Same output dict as ``ops.decision_walk`` (numpy, no jax)."""
+    nodes = np.asarray(nodes, np.int64)
+    trees = np.asarray(trees, np.int64)
+    fetched = np.asarray(fetched, np.int64)
+    st = advance_step(flat, nodes, trees, fetched, item, p_depth)
+    em = np.flatnonzero(st["emit"])
+    wave_nodes = np.empty(0, np.int64)
+    if len(em):
+        wave_nodes, _ = wave_select(flat, st["nodes"][em], trees[em],
+                                    st["lo"][em], st["hi"][em])
+    return {
+        "found": st["found"], "stay": st["stay"], "nodes": st["nodes"],
+        "alive": st["alive"], "fetched": st["fetched"],
+        "wave_nodes": wave_nodes,
+    }

@@ -33,9 +33,9 @@ from repro.core import (
     HeuristicConfig,
     MiningParams,
     PatternMetastore,
-    PrefetchEngine,
     PTreeIndex,
     TwoSpaceCache,
+    build_engine,
     mine_dynamic_minsup,
 )
 
@@ -74,6 +74,9 @@ class PrefetcherConfig:
         default_factory=lambda: MiningParams(minsup=0.05, min_len=3,
                                              max_len=15, maxgap=1))
     mine_every_sessions: int = 64
+    # batched decision engine (flat per-op cost across live contexts);
+    # False = scalar per-context oracle, differentially identical
+    use_vectorized: bool = True
     min_patterns: int = 8
 
 
@@ -88,7 +91,8 @@ class ExpertPrefetcher:
             self.cfg.cache_experts * item_bytes, self.cfg.preemptive_frac)
         self.logger = AccessLogger(session_gap=float("inf"))  # explicit cuts
         self.metastore = PatternMetastore(10_000, self.cfg.mining.max_len)
-        self.engine = PrefetchEngine(PTreeIndex.build([]), self.cfg.heuristic)
+        self.engine = build_engine(PTreeIndex.build([]), self.cfg.heuristic,
+                                   use_vectorized=self.cfg.use_vectorized)
         self._sessions_since_mine = 0
         self.demand_wait_s = 0.0
         self.prefetch_issued = 0

@@ -1,0 +1,111 @@
+"""decision_walk kernel parity: jitted ops vs the numpy reference, and
+the jax-backed engine vs the scalar oracle end to end.
+
+Not tier1 (imports jax); the numpy-only differential grid lives in
+``test_decision.py``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    HeuristicConfig,
+    Pattern,
+    PrefetchEngine,
+    PTreeIndex,
+    VectorizedPrefetchEngine,
+)
+from repro.kernels.decision_walk import ops as dw_ops
+from repro.kernels.decision_walk import ref as dw_ref
+
+from test_decision import HEURISTIC_CFGS, random_index, seqb_stream, \
+    tpcc_stream
+
+
+def live_states(flat, rng, n):
+    """Random plausible context states over ``flat``: any non-leaf node,
+    fetched between its depth and the tree max."""
+    cand = np.flatnonzero(flat.n_children > 0)
+    nodes = cand[rng.integers(0, len(cand), size=n)]
+    trees = flat.tree_of[nodes]
+    lo = flat.depth[nodes]
+    hi = flat.tree_max_depth[trees]
+    fetched = lo + (rng.random(n) * (hi - lo + 1)).astype(np.int64)
+    return nodes, trees, fetched
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_decision_walk_ops_match_ref(seed):
+    rng = np.random.default_rng(seed)
+    flat = random_index(seed, n_patterns=12).flatten()
+    if flat.n_nodes == 0 or not (flat.n_children > 0).any():
+        pytest.skip("degenerate forest")
+    jf = dw_ops.device_forest(flat)
+    for trial in range(8):
+        n = int(rng.integers(1, 9))
+        nodes, trees, fetched = live_states(flat, rng, n)
+        item = int(rng.integers(-2, flat.item_stride + 3))
+        p_depth = int(rng.integers(1, 4))
+        a = dw_ops.decision_walk(jf, flat, nodes, trees, fetched,
+                                 item, p_depth, max_contexts=16)
+        b = dw_ref.decision_walk_ref(flat, nodes, trees, fetched,
+                                     item, p_depth)
+        for key in ("found", "stay", "nodes", "alive", "fetched",
+                    "wave_nodes"):
+            np.testing.assert_array_equal(
+                np.asarray(a[key]), np.asarray(b[key]), err_msg=key)
+
+
+def test_decision_walk_empty_edge_table():
+    flat = PTreeIndex.build([]).flatten()
+    jf = dw_ops.device_forest(flat)
+    out = dw_ops.decision_walk(jf, flat, np.empty(0, np.int64),
+                               np.empty(0, np.int64),
+                               np.empty(0, np.int64), 3, 2,
+                               max_contexts=4)
+    assert out["wave_nodes"].size == 0 and out["alive"].size == 0
+
+
+def test_top_k_frontier_matches_oracle():
+    idx = PTreeIndex.build([
+        Pattern((0, 1, 2), 70),
+        Pattern((0, 3, 4), 21),
+        Pattern((0, 3, 5), 9),
+    ])
+    tree = idx.match_root(0)
+    flat = idx.flatten()
+    s, e = int(flat.tree_start[0]), int(flat.tree_start[1])
+    for k in (1, 2, 3, 5, 10):
+        sel = np.asarray(dw_ops.top_k_frontier(
+            flat.cum_prob[s + 1:e], flat.depth[s + 1:e], k=min(k, e - s - 1)))
+        got = flat.items[s + 1 + sel].tolist()
+        want = [n.item for n in tree.top_n_cumulative(k)]
+        assert got == want, k
+
+
+@pytest.mark.parametrize("cfg", HEURISTIC_CFGS, ids=lambda c: c.name)
+@pytest.mark.parametrize("stream", [seqb_stream, tpcc_stream],
+                         ids=["seqb", "tpcc"])
+def test_jax_backend_engine_matches_scalar(cfg, stream):
+    for seed in range(2):
+        index = random_index(seed, n_patterns=10)
+        ref = PrefetchEngine(index, cfg, max_contexts=8)
+        vec = VectorizedPrefetchEngine(index, cfg, max_contexts=8,
+                                       backend="jax")
+        for i, item in enumerate(stream(seed + 3, index, n_ops=120)):
+            a, b = ref.on_request(item), vec.on_request(item)
+            assert a == b, (seed, i, item, a, b)
+            assert ref.n_live == vec.n_live
+
+
+def test_jax_backend_replace_index_mid_stream():
+    cfg = HeuristicConfig("fetch_progressive", progressive_depth=2)
+    idx1, idx2 = random_index(11), random_index(12)
+    ref = PrefetchEngine(idx1, cfg, max_contexts=8)
+    vec = VectorizedPrefetchEngine(idx1, cfg, max_contexts=8, backend="jax")
+    ops = seqb_stream(7, idx1, n_ops=60) + seqb_stream(8, idx2, n_ops=60)
+    for i, item in enumerate(ops):
+        if i == 60:
+            ref.replace_index(idx2)
+            vec.replace_index(idx2)
+        assert ref.on_request(item) == vec.on_request(item), (i, item)

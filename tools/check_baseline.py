@@ -28,10 +28,14 @@ BASELINE_ERRORS = 0
 # read-repair, write quorum, budget rebalancing), the gossip edge cases,
 # and the maxgap=None candidate-narrowing differentials; PR 5 added the
 # failure-detection suite (phi accrual, hysteresis, probe recovery),
-# sloppy quorums with hint hand-back, and the range-transfer lease tests.
+# sloppy quorums with hint hand-back, and the range-transfer lease tests;
+# PR 6 added the vectorized-vs-scalar decision differentials, the
+# FlatForest invariant checks, the context-management regression tests
+# (stalest eviction, root re-confirm dedupe, depth-0 guards), and the
+# decision-walk kernel parity sweeps.
 # Ratchet UP as suites grow, so green tests stay protected.
 # (tests/test_properties.py skips without hypothesis in both counts.)
-BASELINE_PASSED = 513
+BASELINE_PASSED = 592
 
 
 def write_step_summary(passed: int, failed: int, errors: int,
