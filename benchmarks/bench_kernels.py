@@ -8,7 +8,6 @@ AND+popcount / online softmax) is assessed in the §Roofline analysis.
 
 from __future__ import annotations
 
-import time
 
 import jax
 import jax.numpy as jnp
@@ -18,16 +17,16 @@ from repro.core.mining import VerticalBitmaps
 from repro.kernels.bitmap_support import ops as bm_ops
 from repro.kernels.bitmap_support import ref as bm_ref
 
-from .common import row
+from .common import row, wall_clock
 
 
 def _time(fn, *args, reps=3):
     fn(*args)  # warmup / compile
-    t0 = time.perf_counter()
+    t0 = wall_clock()
     for _ in range(reps):
         out = fn(*args)
         jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
-    return (time.perf_counter() - t0) / reps
+    return (wall_clock() - t0) / reps
 
 
 def main(quick: bool = True):

@@ -20,7 +20,6 @@ that factor smaller) fails the run — the CI perf-smoke gate.
 from __future__ import annotations
 
 import dataclasses
-import time
 import tracemalloc
 
 import numpy as np
@@ -28,7 +27,7 @@ import numpy as np
 from repro.core import ALGORITHMS, MiningParams, SequenceDatabase
 from repro.core.mining import VerticalBitmaps, _dfs_mine, maximal_filter
 
-from .common import bench_cli, row, sum_gate
+from .common import bench_cli, row, sum_gate, wall_clock
 from .workloads import SEQB, SEQBConfig, TPCC, TPCCConfig
 
 
@@ -60,9 +59,9 @@ def _timed(fn, *args, repeats: int = 1):
     best = float("inf")
     out = None
     for _ in range(repeats):
-        t0 = time.perf_counter()
+        t0 = wall_clock()
         out = fn(*args)
-        best = min(best, (time.perf_counter() - t0) * 1e3)
+        best = min(best, (wall_clock() - t0) * 1e3)
     return out, best
 
 

@@ -28,7 +28,6 @@ importable without jax: perf-smoke installs numpy only.)
 
 from __future__ import annotations
 
-import time
 
 import numpy as np
 
@@ -37,7 +36,7 @@ from repro.core import (
     PalpatineConfig, Pattern, PTreeIndex, build_engine,
 )
 
-from .common import bench_cli, row, sum_gate
+from .common import bench_cli, row, sum_gate, wall_clock
 from .workloads import SEQB, SEQBConfig
 
 SPEEDUP_FLOOR_CTX64 = 5.0
@@ -47,9 +46,9 @@ def _median_wall(fn, reps):
     fn()  # warmup
     walls = []
     for _ in range(reps):
-        t0 = time.perf_counter()
+        t0 = wall_clock()
         fn()
-        walls.append(time.perf_counter() - t0)
+        walls.append(wall_clock() - t0)
     return float(np.median(walls))
 
 
@@ -83,10 +82,10 @@ def _decision_pass(engine, index, stream, steady_from):
     engine.replace_index(index)  # reset contexts, same generation arrays
     for item in stream[:steady_from]:
         engine.on_request(item)
-    t0 = time.perf_counter()
+    t0 = wall_clock()
     for item in stream[steady_from:]:
         engine.on_request(item)
-    return time.perf_counter() - t0
+    return wall_clock() - t0
 
 
 def bench_decision(results: dict, quick: bool) -> None:

@@ -8,7 +8,8 @@ reduced sweep density.
 from __future__ import annotations
 
 import argparse
-import time
+
+from .common import wall_clock
 
 
 def main() -> None:
@@ -46,10 +47,10 @@ def main() -> None:
     for name, mod in suites:
         if only and name not in only:
             continue
-        t0 = time.time()
+        t0 = wall_clock()
         print(f"# --- {name} ---", flush=True)
         mod.main(quick=quick)
-        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+        print(f"# {name} took {wall_clock() - t0:.1f}s", flush=True)
 
 
 if __name__ == "__main__":

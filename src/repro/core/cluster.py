@@ -458,6 +458,8 @@ class ShardedDKVStore:
     def load(self, items: Iterable[tuple]) -> None:
         for k, v in items:
             for s in self.replicas_of(k):
+                # palplint: disable=PALP103 -- bulk preload before any
+                # write traffic: absent version means 0 by contract
                 self.shards[s].data[k] = v
 
     def contains(self, key) -> bool:

@@ -636,10 +636,15 @@ def brute_force(db: SequenceDatabase, params: MiningParams) -> list[Pattern]:
 
             for p0 in range(len(seq)):
                 expand((seq[p0],), p0)
-        for s in seen:
+        # sorted: dict insertion order must not depend on hash-seeded
+        # set iteration
+        for s in sorted(seen):
             counts[s] = counts.get(s, 0) + 1
     msc = params.minsup_count(len(db))
-    return [Pattern(k, v) for k, v in counts.items() if v >= msc]
+    # sorted output: the oracle's pattern order is a function of the
+    # data alone, never of per-process hash seeds
+    return sorted((Pattern(k, v) for k, v in counts.items() if v >= msc),
+                  key=lambda p: p.items)
 
 
 ALGORITHMS: dict[str, Callable] = {

@@ -13,6 +13,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from . import ref as _ref
 from .decision_walk import decision_walk_step, top_k_frontier
 
 __all__ = ["device_forest", "decision_walk", "top_k_frontier"]
@@ -47,13 +48,23 @@ def device_forest(flat) -> DeviceForest:
 
 def decision_walk(jf: DeviceForest, flat, nodes, trees, fetched,
                   item: int, p_depth: int,
-                  max_contexts: int | None = None) -> dict:
+                  max_contexts: int | None = None,
+                  interpret: bool | None = None) -> dict:
     """Advance the ``n`` live contexts by ``item`` on the jitted path.
 
     Returns the same state dict as :func:`repro.core.decision.
     advance_step`, plus the already-selected ``wave_nodes`` (row-major
     nonzeros of the dense wave mask = the scalar engine's context-major,
-    level-ordered emission)."""
+    level-ordered emission).
+
+    ``interpret=True`` is the escape hatch: it routes through the pure
+    numpy reference (:func:`ref.decision_walk_ref`) — no jit, no device
+    — for debugging and for environments where tracing itself is the
+    suspect.  The default (``None``/``False``) keeps the jitted path,
+    which runs on any backend (CPU-jit included)."""
+    if interpret:
+        return _ref.decision_walk_ref(flat, nodes, trees, fetched,
+                                      item, p_depth)
     n = len(nodes)
     if flat.n_nodes == 0:
         # zero-node forest: nothing to gather against — every context is

@@ -49,7 +49,8 @@ def chunked_gla(q, k, v, log_f, log_i, chunk: int, state0=None):
     if pad:
         # zero k/v leave the state untouched; log_f=0 means no decay
         def zpad(x):
-            return jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+            return jnp.pad(
+                x, [(0, 0), (0, pad), *([(0, 0)] * (x.ndim - 2))])
         q, k, v, log_f, log_i = map(zpad, (q, k, v, log_f, log_i))
         s = s + pad
     nc = s // chunk

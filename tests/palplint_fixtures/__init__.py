@@ -1,0 +1,3 @@
+# Deliberately-violating (and deliberately-clean) fixture modules for
+# the palplint rule tests.  Never imported at runtime — only parsed by
+# the linter — and excluded from default palplint directory walks.

@@ -1,0 +1,29 @@
+"""PALP001 positive: wall-clock reads, including an alias dodge."""
+
+import time
+import time as _t
+from time import perf_counter
+from datetime import datetime
+
+
+def elapsed():
+    t0 = time.time()           # violation
+    t1 = time.perf_counter()   # violation
+    return t1 - t0
+
+
+def aliased():
+    return _t.monotonic()      # violation: alias does not dodge
+
+
+def from_import():
+    return perf_counter()      # violation: from-import resolved
+
+
+def stamp():
+    return datetime.now()      # violation
+
+
+def bound():
+    clock = time.perf_counter  # violation: bare reference counts too
+    return clock()

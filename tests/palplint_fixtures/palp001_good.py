@@ -1,0 +1,14 @@
+"""PALP001 negative: virtual clock + the sanctioned bench accessor."""
+
+
+def elapsed(clock):
+    t0 = clock.now
+    clock.sync(t0 + 1.0)
+    return clock.now - t0
+
+
+def bench_timing(wall_clock):
+    # the accessor is injected/imported from benchmarks.common — calling
+    # it is fine; only raw time.* / datetime.* reads are flagged
+    t0 = wall_clock()
+    return wall_clock() - t0

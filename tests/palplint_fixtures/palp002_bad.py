@@ -1,0 +1,23 @@
+"""PALP002 positive: global-state RNG in every flavor."""
+
+import random
+
+import numpy as np
+import numpy.random as npr
+
+
+def draws():
+    a = np.random.randint(0, 10)   # violation: legacy module-level fn
+    b = npr.random()               # violation: alias does not dodge
+    c = random.random()            # violation: stdlib global Random
+    return a, b, c
+
+
+def seeding():
+    np.random.seed(0)              # violation: mutates global state
+    rng = np.random.default_rng()  # violation: entropy-seeded
+    return rng
+
+
+def shapes():
+    return np.random.rand(3, 4)    # violation (and --fix rewrites it)

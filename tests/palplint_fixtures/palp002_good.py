@@ -1,0 +1,16 @@
+"""PALP002 negative: explicitly seeded generators only."""
+
+import random
+
+import numpy as np
+
+
+def draws(seed: int):
+    rng = np.random.default_rng(seed)
+    r = random.Random(seed)
+    return rng.integers(0, 10), rng.random(), r.random()
+
+
+def generator_methods(rng: np.random.Generator):
+    # methods on an injected Generator instance are always fine
+    return rng.normal(size=(3, 4))

@@ -1,0 +1,27 @@
+"""PALP003 positive: set-iteration order reaching output."""
+
+
+class Tracker:
+    def __init__(self):
+        self.pending: set[int] = set()
+
+    def emit(self):
+        out = []
+        for key in self.pending:        # violation: self attr is a set
+            out.append(key)
+        return out
+
+
+def orderings(xs):
+    live = {x for x in xs if x > 0}
+    report = [x * 2 for x in live]      # violation: comprehension
+    listed = list({1, 2, 3})            # violation: list(set literal)
+    joined = ",".join({"a", "b"})       # violation: join over a set
+    for x in live | {0}:                # violation: set union
+        report.append(x)
+    return report, listed, joined
+
+
+def returns_sets(detector):
+    for node in detector.suspects():    # violation: known set-returning
+        print(node)

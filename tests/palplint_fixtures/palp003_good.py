@@ -1,0 +1,14 @@
+"""PALP003 negative: sorted iteration and order-free reductions."""
+
+
+def orderings(xs, detector):
+    live = {x for x in xs if x > 0}
+    report = [x * 2 for x in sorted(live)]
+    total = sum(live)                    # order-free reduction
+    top = max(live) if live else None    # order-free reduction
+    others = {x + 1 for x in live}       # set -> set stays unordered
+    for node in sorted(detector.suspects()):
+        report.append(node)
+    if 3 in live:                        # membership is order-free
+        report.append(3)
+    return report, total, top, others

@@ -1,0 +1,16 @@
+"""PALP101 positive: RPCFutures issued and never consumed."""
+
+
+def fire_and_forget(node, key, now):
+    node.get_async(key, now)                 # violation: discarded
+
+
+def bound_but_dropped(node, keys, now):
+    fut = node.multi_get_async(keys, now)    # violation: never read
+    return len(keys)
+
+
+def one_of_two_dropped(a, b, key, now):
+    fa = a.get_async(key, now)               # violation: never read
+    fb = b.get_async(key, now)
+    return fb.result()

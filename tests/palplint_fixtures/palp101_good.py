@@ -1,0 +1,26 @@
+"""PALP101 negative: futures consumed or explicitly abandoned."""
+
+
+def consumed(node, key, now):
+    fut = node.get_async(key, now)
+    return fut.result()
+
+
+def consumed_later(node, keys, now):
+    futs = [node.get_async(k, now) for k in keys]
+    return [f.value() for f in futs]
+
+
+def explicitly_abandoned(node, key, now):
+    # speculative warm-up read: the reply is deliberately dropped
+    _abandoned_warmup = node.get_async(key, now)
+    return None
+
+
+def consumed_in_closure(node, key, now):
+    fut = node.get_async(key, now)
+
+    def finish():
+        return fut.result()
+
+    return finish

@@ -1,0 +1,16 @@
+"""PALP102 positive: coordinator retry loop with no timeout bound."""
+
+
+def scatter(self, keys, now):
+    remaining = set(keys)
+    while remaining:                      # violation: no rpc_timeout
+        for k in sorted(remaining):
+            fut = self.shards[0].get_async(k, now)
+            if fut.result():
+                remaining.discard(k)
+
+
+def spin(self, key, now):
+    while True:                           # violation: no rpc_timeout
+        if not self.shards[0].crashed:
+            return self.shards[0].get_async(key, now).result()

@@ -1,0 +1,23 @@
+"""PALP102 negative: waits bounded by rpc_timeout (and non-RPC loops)."""
+
+
+def scatter(self, keys, now):
+    remaining = set(keys)
+    waited = 0.0
+    while remaining:
+        for k in sorted(remaining):
+            fut = self.shards[0].get_async(k, now)
+            if fut.result():
+                remaining.discard(k)
+        waited += self.rpc_timeout
+        if waited > self.rpc_timeout * 3:
+            break
+
+
+def plain_loop(n):
+    # a while loop with no RPC machinery in it is not a wait loop
+    total = 0
+    while n > 0:
+        total += n
+        n -= 1
+    return total

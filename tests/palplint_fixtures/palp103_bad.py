@@ -1,0 +1,11 @@
+"""PALP103 positive: replica store writes with no version guard."""
+
+
+def repair(self, node, key, value):
+    node.data[key] = value                 # violation: no versions ref
+
+
+def drain(self, holder, node, items):
+    for key, value in items:
+        node.data[key] = value             # violation: no versions ref
+        holder.hints.pop(key, None)

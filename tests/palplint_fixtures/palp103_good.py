@@ -1,0 +1,23 @@
+"""PALP103 negative: mutations guarded by version comparisons."""
+
+
+def repair(self, node, key, value, version):
+    if version > node.versions.get(key, 0):
+        node.data[key] = value
+        node.versions[key] = version
+
+
+def drain(self, holder, node, items):
+    for key, value, version in items:
+        if version >= node.versions.get(key, 0):
+            node.data[key] = value
+            node.versions[key] = version
+        holder.hints.pop(key, None)
+
+
+def bookkeeping(self, stats, key, n):
+    # `.data` on non-store objects without any store write is not the
+    # pattern: the rule keys on the attribute name, so this *is* in
+    # scope — the version reference below keeps it quiet
+    stats.data[key] = n
+    stats.versions[key] = stats.versions.get(key, 0) + 1

@@ -1,0 +1,26 @@
+"""PALP201 positive: traced-value coercion inside jit/pallas bodies."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@jax.jit
+def bare_jit(x):
+    return jnp.where(x > 0, float(x), 0.0)        # violation
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def partial_jit(x, k: int):
+    top = int(x.max())                            # violation: traced
+    return top + k
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * bool(x_ref[0, 0])   # violation
+
+
+def launch(x):
+    return pl.pallas_call(_kernel, out_shape=x)(x)

@@ -1,0 +1,28 @@
+"""PALP201 negative: static-shape math and static-argname coercion."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def shape_math(x):
+    n = int(x.shape[0])          # fine: shapes are static under trace
+    return x.reshape(n, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "block"))
+def static_coercion(x, sm_scale, block: int):
+    scale = float(sm_scale)      # fine: sm_scale is a static argname
+    return x * scale + float(len(x.shape))
+
+
+def untraced(x):
+    # not jitted: host-side coercion is ordinary python
+    return float(x)
+
+
+@jax.jit
+def jnp_only(x):
+    return jnp.asarray(x, jnp.float32).sum()

@@ -1,0 +1,19 @@
+"""PALP202 positive: numpy array ops inside traced bodies."""
+
+import jax
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+@jax.jit
+def mixed(x):
+    y = np.maximum(x, 0)         # violation: host round-trip
+    return np.sum(y)             # violation
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = np.tanh(x_ref[...])   # violation inside pallas body
+
+
+def launch(x):
+    return pl.pallas_call(_kernel, out_shape=x)(x)

@@ -1,0 +1,17 @@
+"""PALP202 negative: jnp ops and static numpy metadata only."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def traced(x):
+    sentinel = np.iinfo(np.int64).max    # fine: static metadata
+    y = jnp.maximum(x, 0)
+    return jnp.where(y == sentinel, 0, y).sum()
+
+
+def host_side(x):
+    # not traced: numpy is the right tool out here
+    return np.maximum(np.asarray(x), 0)

@@ -1,0 +1,10 @@
+"""PALP203 positive: an ops.py-shaped entry point with no interpret
+escape hatch and no pre-dispatch padding."""
+
+from .palp202_good import traced as sibling_kernel
+
+__all__ = ["entry"]
+
+
+def entry(x):                    # violation x2: no interpret, no pad
+    return sibling_kernel(x)

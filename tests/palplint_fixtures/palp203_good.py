@@ -1,0 +1,21 @@
+"""PALP203 negative: disciplined kernel entry point — interpret escape
+hatch plus pad-to-block before dispatch."""
+
+import numpy as np
+
+from .palp202_good import traced as sibling_kernel
+
+__all__ = ["entry"]
+
+
+def _pad_to(a, mult):
+    pad = (-a.shape[0]) % mult
+    return np.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+
+
+def entry(x, block: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = True
+    xp = _pad_to(np.asarray(x), block)
+    out = sibling_kernel(xp)
+    return out[: x.shape[0]]

@@ -1,0 +1,8 @@
+"""Suppression fixtures: a disable with no justification is inert and
+is itself reported (PALP000)."""
+
+import time
+
+
+def telemetry():
+    return time.time()  # palplint: disable=PALP001

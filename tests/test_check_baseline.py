@@ -1,0 +1,127 @@
+"""The baseline ratchet gates every PR; these tests pin its parsing,
+verdict, exit-code, and job-summary behavior without spawning pytest.
+"""
+
+import pytest
+
+from tools import check_baseline as cb
+
+pytestmark = pytest.mark.tier1
+
+
+# ------------------------------------------------------------- parsing
+
+@pytest.mark.parametrize("tail,want", [
+    ("592 passed in 12.3s", (592, 0, 0)),
+    ("590 passed, 2 failed in 9.9s", (590, 2, 0)),
+    ("1 failed, 591 passed, 3 errors in 1.0s", (591, 1, 3)),
+    ("4 passed, 1 skipped, 2 deselected in 0.2s", (4, 0, 0)),
+    ("no tests ran in 0.01s", (0, 0, 0)),
+    ("", (0, 0, 0)),
+])
+def test_parse_counts(tail, want):
+    # real runs put the summary on the last line after pages of dots
+    output = "....\nsome noise\n" + tail if tail else tail
+    assert cb.parse_counts(output) == want
+
+
+def test_parse_counts_only_reads_last_line():
+    out = "10 passed in 1s\n2 failed, 3 passed in 2s"
+    assert cb.parse_counts(out) == (3, 2, 0)
+
+
+# ------------------------------------------------------------- verdict
+
+def test_evaluate_accepts_at_floor():
+    ok, msgs = cb.evaluate(cb.BASELINE_PASSED, 0, 0)
+    assert ok and msgs == []
+
+
+def test_evaluate_accepts_above_floor():
+    ok, _ = cb.evaluate(cb.BASELINE_PASSED + 25, 0, 0)
+    assert ok
+
+
+def test_evaluate_rejects_lost_passes():
+    ok, msgs = cb.evaluate(cb.BASELINE_PASSED - 1, 0, 0)
+    assert not ok
+    assert any("passed" in m for m in msgs)
+
+
+def test_evaluate_rejects_new_failures_even_if_floor_met():
+    ok, msgs = cb.evaluate(cb.BASELINE_PASSED + 5, 1, 0)
+    assert not ok
+    assert any("failed+errors" in m for m in msgs)
+
+
+def test_evaluate_rejects_errors_as_failures():
+    ok, _ = cb.evaluate(cb.BASELINE_PASSED, 0, 2)
+    assert not ok
+
+
+# ----------------------------------------------------- main / exit code
+
+def fake_run(tail):
+    def run(extra_args):
+        return f"....\n{tail}\n"
+    return run
+
+
+def test_main_exit_zero_on_green(capsys):
+    rc = cb.main([], run=fake_run(f"{cb.BASELINE_PASSED} passed in 1s"))
+    assert rc == 0
+    assert "baseline check OK" in capsys.readouterr().out
+
+
+def test_main_exit_one_on_regression(capsys):
+    rc = cb.main([], run=fake_run(
+        f"2 failed, {cb.BASELINE_PASSED} passed in 1s"))
+    assert rc == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_main_passes_argv_through():
+    seen = {}
+
+    def run(extra_args):
+        seen["args"] = list(extra_args)
+        return f"{cb.BASELINE_PASSED} passed in 1s"
+
+    cb.main(["-k", "mining"], run=run)
+    assert seen["args"] == ["-k", "mining"]
+
+
+# ------------------------------------------------------- step summary
+
+def test_step_summary_table(tmp_path, monkeypatch):
+    path = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(path))
+    cb.write_step_summary(600, 1, 2, ok=False)
+    text = path.read_text()
+    assert "## full-suite baseline" in text
+    assert "❌ baseline regression" in text
+    assert "| this run | 600 | 1 | 2 |" in text
+    assert f"| baseline | {cb.BASELINE_PASSED} (floor)" in text
+
+
+def test_step_summary_appends(tmp_path, monkeypatch):
+    path = tmp_path / "summary.md"
+    path.write_text("prior content\n")
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(path))
+    cb.write_step_summary(cb.BASELINE_PASSED, 0, 0, ok=True)
+    text = path.read_text()
+    assert text.startswith("prior content\n")
+    assert "✅ baseline OK" in text
+
+
+def test_step_summary_noop_without_env(tmp_path, monkeypatch):
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    cb.write_step_summary(1, 2, 3, ok=False)  # must not raise
+
+
+def test_main_writes_summary_end_to_end(tmp_path, monkeypatch):
+    path = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(path))
+    rc = cb.main([], run=fake_run(f"{cb.BASELINE_PASSED} passed in 1s"))
+    assert rc == 0
+    assert "✅ baseline OK" in path.read_text()

@@ -139,7 +139,7 @@ def test_replicas_are_distinct_and_loaded_everywhere():
         assert reps[0] == store.shard_of(k)
         for s in reps:
             assert store.shards[s].data[k] == value_of(k)
-        for s in set(range(4)) - set(reps):
+        for s in sorted(set(range(4)) - set(reps)):
             assert k not in store.shards[s].data
 
 

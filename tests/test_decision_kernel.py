@@ -56,6 +56,32 @@ def test_decision_walk_ops_match_ref(seed):
                 np.asarray(a[key]), np.asarray(b[key]), err_msg=key)
 
 
+@pytest.mark.parametrize("seed", range(3))
+def test_decision_walk_interpret_escape_hatch(seed):
+    """`interpret=True` routes through the numpy reference and must
+    agree with the jitted path bit for bit (palplint PALP203: every
+    kernel entry point carries this escape hatch)."""
+    rng = np.random.default_rng(seed)
+    flat = random_index(seed, n_patterns=12).flatten()
+    if flat.n_nodes == 0 or not (flat.n_children > 0).any():
+        pytest.skip("degenerate forest")
+    jf = dw_ops.device_forest(flat)
+    for _ in range(4):
+        n = int(rng.integers(1, 9))
+        nodes, trees, fetched = live_states(flat, rng, n)
+        item = int(rng.integers(-2, flat.item_stride + 3))
+        jitted = dw_ops.decision_walk(jf, flat, nodes, trees, fetched,
+                                      item, 2, max_contexts=16)
+        interp = dw_ops.decision_walk(jf, flat, nodes, trees, fetched,
+                                      item, 2, max_contexts=16,
+                                      interpret=True)
+        for key in ("found", "stay", "nodes", "alive", "fetched",
+                    "wave_nodes"):
+            np.testing.assert_array_equal(
+                np.asarray(jitted[key]), np.asarray(interp[key]),
+                err_msg=key)
+
+
 def test_decision_walk_empty_edge_table():
     flat = PTreeIndex.build([]).flatten()
     jf = dw_ops.device_forest(flat)

@@ -58,6 +58,18 @@ def test_all_patterns_match_oracle(algo, maxgap):
 
 
 @pytest.mark.parametrize("maxgap", [1, None])
+def test_brute_force_output_order_is_hash_independent(maxgap):
+    """Regression (palplint PALP003 sweep): the oracle used to build its
+    counts dict by iterating a per-session `seen` *set*, so the returned
+    pattern order depended on hash-seeded set ordering.  It now sorts,
+    making the order a function of the data alone."""
+    db = make_db(seed=5)
+    params = MiningParams(minsup=0.1, min_len=2, max_len=5, maxgap=maxgap)
+    keys = [p.items for p in brute_force(db, params)]
+    assert keys == sorted(keys)
+
+
+@pytest.mark.parametrize("maxgap", [1, None])
 def test_vmsp_is_maximal_subset_of_oracle(maxgap):
     db = make_db(seed=3)
     params = MiningParams(minsup=0.1, min_len=3, max_len=6, maxgap=maxgap)
@@ -89,7 +101,7 @@ def test_planted_sequences_found():
     params = MiningParams(minsup=0.15, min_len=3, max_len=6, maxgap=1)
     found = {p.items for p in ALGORITHMS["vmsp"](db, params)}
     covered = set()
-    for f in found:
+    for f in sorted(found):
         for i in range(len(f)):
             for j in range(i + 1, len(f) + 1):
                 covered.add(f[i:j])
@@ -244,7 +256,7 @@ def _naive_maximal(patterns):
 @pytest.mark.parametrize("maxgap", [2, None])
 def test_maximal_filter_bucketed_matches_naive(seed, maxgap):
     rng = np.random.default_rng(seed)
-    pats = list({
+    pats = sorted({
         tuple(rng.integers(0, 6, size=int(rng.integers(1, 7))).tolist())
         for _ in range(60)})
     patterns = [Pattern(p, int(rng.integers(1, 9))) for p in pats]

@@ -7,6 +7,10 @@ dependent modules; PR 2 repaired all of them (jax 0.4.x API drift:
 change *add* failures or *lose* passing tests.
 
 Usage:  PYTHONPATH=src python tools/check_baseline.py [extra pytest args]
+
+The parsing/verdict core is pure (``parse_counts`` / ``evaluate``) and
+``main`` takes an injectable runner, so the gate itself is testable
+(tests/test_check_baseline.py) without spawning a real pytest run.
 """
 
 from __future__ import annotations
@@ -15,6 +19,7 @@ import os
 import re
 import subprocess
 import sys
+from typing import Callable, Optional, Sequence
 
 # failure ceiling, not-to-exceed: the seed's 28/4 accelerator red was
 # repaired in PR 2 — the suite is fully green and must stay that way
@@ -32,10 +37,41 @@ BASELINE_ERRORS = 0
 # PR 6 added the vectorized-vs-scalar decision differentials, the
 # FlatForest invariant checks, the context-management regression tests
 # (stalest eviction, root re-confirm dedupe, depth-0 guards), and the
-# decision-walk kernel parity sweeps.
+# decision-walk kernel parity sweeps; PR 7 added the palplint framework
+# suite (per-rule fixtures, suppressions, CLI, --fix), this gate's own
+# tests, the decision-walk interpret-parity tests, and the oracle
+# pattern-order regression.
 # Ratchet UP as suites grow, so green tests stay protected.
 # (tests/test_properties.py skips without hypothesis in both counts.)
-BASELINE_PASSED = 592
+BASELINE_PASSED = 655
+
+
+def parse_counts(output: str) -> tuple[int, int, int]:
+    """Extract (passed, failed, errors) from a pytest run's output.
+
+    pytest prints the totals on its final summary line (``N passed, M
+    failed, K errors in ...``); absent categories simply don't appear.
+    """
+    tail = output.strip().splitlines()[-1] if output.strip() else ""
+
+    def count(kind: str) -> int:
+        m = re.search(rf"(\d+) {kind}", tail)
+        return int(m.group(1)) if m else 0
+
+    return count("passed"), count("failed"), count("error")
+
+
+def evaluate(passed: int, failed: int, errors: int,
+             ) -> tuple[bool, list[str]]:
+    """Verdict + human-readable regression messages (pure)."""
+    messages = []
+    if passed < BASELINE_PASSED:
+        messages.append(f"REGRESSION: passed {passed} < baseline "
+                        f"{BASELINE_PASSED}")
+    if failed + errors > BASELINE_FAILED + BASELINE_ERRORS:
+        messages.append(f"REGRESSION: failed+errors {failed + errors} > "
+                        f"baseline {BASELINE_FAILED + BASELINE_ERRORS}")
+    return not messages, messages
 
 
 def write_step_summary(passed: int, failed: int, errors: int,
@@ -58,28 +94,22 @@ def write_step_summary(passed: int, failed: int, errors: int,
         ]) + "\n\n")
 
 
-def main() -> int:
-    cmd = [sys.executable, "-m", "pytest", "-q", "--tb=no", *sys.argv[1:]]
+def run_pytest(extra_args: Sequence[str]) -> str:
+    cmd = [sys.executable, "-m", "pytest", "-q", "--tb=no", *extra_args]
     proc = subprocess.run(cmd, capture_output=True, text=True)
-    out = proc.stdout + proc.stderr
-    tail = out.strip().splitlines()[-1] if out.strip() else ""
+    return proc.stdout + proc.stderr
+
+
+def main(argv: Optional[Sequence[str]] = None,
+         run: Callable[[Sequence[str]], str] = run_pytest) -> int:
+    out = run(list(sys.argv[1:] if argv is None else argv))
     print(out)
-
-    def count(kind: str) -> int:
-        m = re.search(rf"(\d+) {kind}", tail)
-        return int(m.group(1)) if m else 0
-
-    passed, failed, errors = count("passed"), count("failed"), count("error")
+    passed, failed, errors = parse_counts(out)
     print(f"summary: {passed} passed / {failed} failed / {errors} errors "
           f"(baseline {BASELINE_PASSED}/{BASELINE_FAILED}/{BASELINE_ERRORS})")
-    ok = True
-    if passed < BASELINE_PASSED:
-        print(f"REGRESSION: passed {passed} < baseline {BASELINE_PASSED}")
-        ok = False
-    if failed + errors > BASELINE_FAILED + BASELINE_ERRORS:
-        print(f"REGRESSION: failed+errors {failed + errors} > "
-              f"baseline {BASELINE_FAILED + BASELINE_ERRORS}")
-        ok = False
+    ok, messages = evaluate(passed, failed, errors)
+    for msg in messages:
+        print(msg)
     if ok:
         print("baseline check OK")
     write_step_summary(passed, failed, errors, ok)

@@ -1,0 +1,27 @@
+"""palplint — repo-specific static analysis for the Palpatine repro.
+
+An AST-based lint pass enforcing the conventions no generic linter
+checks: virtual-clock discipline and seeded determinism in simulation
+code, ``RPCFuture``/version-check protocols in the cluster layer, and
+jax/Pallas tracer safety in the kernel layer.
+
+Entry point: ``python -m tools.palplint src benchmarks tools``.
+See ``tools/palplint/README.md`` for the rule catalog.
+"""
+
+from __future__ import annotations
+
+from .diagnostics import Diagnostic, Suppressions
+from .engine import lint_file, lint_paths, run_rule
+from .registry import RULES, Rule, register
+
+__all__ = [
+    "Diagnostic",
+    "Rule",
+    "RULES",
+    "Suppressions",
+    "lint_file",
+    "lint_paths",
+    "register",
+    "run_rule",
+]

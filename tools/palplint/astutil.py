@@ -1,0 +1,97 @@
+"""Shared AST helpers: import-alias resolution and qualified names.
+
+Rules match *resolved* dotted names (``numpy.random.randint``,
+``time.perf_counter``) rather than surface text, so ``import time as
+_time`` or ``from numpy import random as npr`` cannot dodge a rule.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+
+class ImportMap:
+    """Local-name -> dotted-origin mapping for one module."""
+
+    def __init__(self, tree: ast.Module) -> None:
+        #: alias -> module dotted path ("np" -> "numpy")
+        self.modules: dict[str, str] = {}
+        #: alias -> full dotted origin ("perf_counter" ->
+        #: "time.perf_counter", "npr" -> "numpy.random")
+        self.names: dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.modules[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                base = node.module  # relative imports keep the tail
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.names[a.asname or a.name] = f"{base}.{a.name}"
+
+    def qualname(self, node: ast.AST) -> Optional[str]:
+        """Resolve ``Name``/``Attribute`` chains to a dotted origin.
+
+        Returns ``None`` when the root is not an imported module or
+        imported name (e.g. a local variable), so method calls on local
+        objects never match module-level patterns.
+        """
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = node.id
+        if root in self.modules:
+            parts.append(self.modules[root])
+        elif root in self.names:
+            parts.append(self.names[root])
+        else:
+            return None
+        return ".".join(reversed(parts))
+
+
+def walk_own(node: ast.AST) -> Iterator[ast.AST]:
+    """``ast.walk`` that does not descend into nested function scopes."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        child = stack.pop()
+        yield child
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(child))
+
+
+def functions(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    """Bare trailing name of a call: ``a.b.get_async(...)`` -> ``get_async``."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def line_starts(source: str) -> list[int]:
+    """Offsets of each line start, for (line, col) -> offset mapping."""
+    starts, pos = [0], 0
+    for ln in source.splitlines(keepends=True):
+        pos += len(ln)
+        starts.append(pos)
+    return starts
+
+
+def offset_of(starts: list[int], line: int, col: int) -> int:
+    """Translate a 1-based (line, col) AST position to a string offset."""
+    return starts[line - 1] + col

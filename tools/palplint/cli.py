@@ -1,0 +1,135 @@
+"""Command-line interface: ``python -m tools.palplint [paths...]``.
+
+Exit codes: 0 clean, 1 violations found, 2 usage/internal error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import os
+import sys
+from typing import Optional, Sequence
+
+from .engine import ResultCache, fix_file, iter_python_files, lint_paths
+from .registry import RULES, load_rules
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m tools.palplint",
+        description=("repo-specific static analysis: determinism, "
+                     "futures/RPC discipline, tracer safety"))
+    p.add_argument("paths", nargs="*", default=["src", "benchmarks",
+                                                "tools"],
+                   help="files or directories to lint (default: "
+                        "src benchmarks tools)")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument("--select", metavar="CODES",
+                   help="comma-separated rule codes to run (default: "
+                        "all)")
+    p.add_argument("--force-scope", action="store_true",
+                   help="run selected rules on every file, ignoring "
+                        "per-rule path scoping (fixture testing)")
+    p.add_argument("--fix", action="store_true",
+                   help="apply mechanical fixes (seeded-RNG rewrite, "
+                        "bench wall-clock accessor) before linting")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    p.add_argument("--cache", metavar="PATH",
+                   help="JSON result cache keyed on file + rule "
+                        "contents (CI uses this)")
+    p.add_argument("--github-summary", action="store_true",
+                   help="append a per-rule violation table to "
+                        "$GITHUB_STEP_SUMMARY when set")
+    return p
+
+
+def _write_github_summary(counts: collections.Counter, n_files: int,
+                          ok: bool) -> None:
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    load_rules()
+    verdict = "✅ palplint clean" if ok else "❌ palplint violations"
+    lines = [
+        "## palplint", "",
+        f"**{verdict}** — {n_files} files, {len(RULES)} rules", "",
+        "| rule | name | violations |",
+        "|---|---|---:|",
+    ]
+    for code in sorted(set(RULES) | set(counts)):
+        name = RULES[code].name if code in RULES else "(meta)"
+        lines.append(f"| {code} | {name} | {counts.get(code, 0)} |")
+    with open(path, "a", encoding="utf-8") as fh:
+        fh.write("\n".join(lines) + "\n\n")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = _build_parser().parse_args(argv)
+    load_rules()
+
+    if args.list_rules:
+        for code, rule in sorted(RULES.items()):
+            print(f"{code} [{rule.family}] {rule.name}: {rule.summary}")
+        return 0
+
+    select: Optional[set[str]] = None
+    if args.select:
+        select = {c.strip().upper() for c in args.select.split(",")
+                  if c.strip()}
+        unknown = select - set(RULES) - {"PALP000"}
+        if unknown:
+            print(f"unknown rule code(s): {', '.join(sorted(unknown))}",
+                  file=sys.stderr)
+            return 2
+    if args.force_scope and select is None:
+        print("--force-scope requires --select (scoping exists because "
+              "most rules only make sense in their subtree)",
+              file=sys.stderr)
+        return 2
+
+    missing = [p for p in args.paths if not os.path.exists(p)]
+    if missing:
+        print(f"no such path: {', '.join(missing)}", file=sys.stderr)
+        return 2
+
+    if args.fix:
+        n_edits = sum(fix_file(f)
+                      for f in iter_python_files(args.paths))
+        print(f"palplint --fix: {n_edits} edit(s) applied")
+
+    cache = ResultCache(args.cache) if args.cache else None
+    diags, n_files = lint_paths(args.paths, select=select,
+                                force_scope=args.force_scope,
+                                cache=cache)
+    counts = collections.Counter(d.code for d in diags)
+    ok = not diags
+
+    if args.format == "json":
+        print(json.dumps({
+            "ok": ok,
+            "files": n_files,
+            "rules": sorted(RULES),
+            "counts": dict(sorted(counts.items())),
+            "diagnostics": [d.to_json() for d in diags],
+        }, indent=2))
+    else:
+        for d in diags:
+            print(d.format())
+        summary = ", ".join(f"{c} x{n}" for c, n in sorted(counts.items()))
+        if ok:
+            print(f"palplint: {n_files} files clean "
+                  f"({len(RULES)} rules)")
+        else:
+            print(f"palplint: {len(diags)} violation(s) in {n_files} "
+                  f"files: {summary}")
+
+    if args.github_summary:
+        _write_github_summary(counts, n_files, ok)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,112 @@
+"""Diagnostics and suppression-comment handling.
+
+A diagnostic is one finding: ``path:line:col: CODE message``.  Findings
+are silenced per line with a justified suppression comment::
+
+    x = time.time()  # palplint: disable=PALP001 -- host telemetry only
+
+or for a whole file (comment anywhere at top level, usually the
+header)::
+
+    # palplint: disable-file=PALP003 -- order never reaches output
+
+The justification (everything after ``--``) is mandatory: a bare
+``disable=`` does *not* suppress and is itself reported as ``PALP000``,
+so silencing a rule always costs one reviewable line of prose.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import re
+import tokenize
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*palplint:\s*(disable|disable-file)\s*=\s*"
+    r"(?P<codes>[A-Z0-9]+(?:\s*,\s*[A-Z0-9]+)*)"
+    r"(?:\s*(?:--|—)\s*(?P<why>.*\S))?"
+)
+
+#: meta-code for malformed suppressions (not a registered rule: it can
+#: only be produced by the suppression parser, never suppressed itself)
+META_CODE = "PALP000"
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Diagnostic:
+    """One finding, ordered for stable output."""
+
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.code} {self.message}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Suppressions:
+    """Per-file suppression table parsed from comment tokens."""
+
+    def __init__(self) -> None:
+        self.by_line: dict[int, set[str]] = {}
+        self.file_wide: set[str] = set()
+        #: (line, codes) of disables missing a justification — inert
+        self.unjustified: list[tuple[int, str]] = []
+
+    @classmethod
+    def parse(cls, source: str) -> "Suppressions":
+        sup = cls()
+        try:
+            tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+            comments = [(t.start[0], t.string) for t in tokens
+                        if t.type == tokenize.COMMENT]
+        except (tokenize.TokenError, IndentationError):
+            return sup
+        lines = source.splitlines()
+
+        def next_code_line(after: int) -> int:
+            """First line past ``after`` that is not blank/comment —
+            an own-line disable applies to the statement it precedes."""
+            for i in range(after, len(lines)):
+                stripped = lines[i].strip()
+                if stripped and not stripped.startswith("#"):
+                    return i + 1
+            return after
+
+        for line, text in comments:
+            m = _SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            codes = {c.strip() for c in m.group("codes").split(",")}
+            if not m.group("why"):
+                sup.unjustified.append((line, ", ".join(sorted(codes))))
+                continue
+            if m.group(1) == "disable-file":
+                sup.file_wide |= codes
+                continue
+            sup.by_line.setdefault(line, set()).update(codes)
+            own_line = lines[line - 1].strip().startswith("#")
+            if own_line:
+                target = next_code_line(line)
+                sup.by_line.setdefault(target, set()).update(codes)
+        return sup
+
+    def is_suppressed(self, code: str, line: int) -> bool:
+        if code in self.file_wide:
+            return True
+        return code in self.by_line.get(line, set())
+
+    def meta_diagnostics(self, path: str) -> list[Diagnostic]:
+        return [
+            Diagnostic(path, line, 1, META_CODE,
+                       f"suppression of {codes} has no justification "
+                       "(add ` -- <reason>`); it is ignored")
+            for line, codes in self.unjustified
+        ]

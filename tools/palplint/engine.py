@@ -1,0 +1,194 @@
+"""Scan driver: path walking, scoping, suppression filtering, caching,
+and ``--fix`` application."""
+
+from __future__ import annotations
+
+import ast
+import hashlib
+import json
+import os
+from typing import Iterable, Optional
+
+from .diagnostics import Diagnostic, Suppressions
+from .registry import RULES, FileContext, load_rules
+
+_SKIP_DIRS = {"__pycache__", "palplint_fixtures", ".git", ".venv",
+              "node_modules"}
+
+
+def iter_python_files(paths: Iterable[str]) -> list[str]:
+    """Expand files/directories to a sorted list of ``.py`` files.
+
+    Directory walks skip fixture and cache dirs; explicitly named files
+    are always included (tests lint fixtures by naming them).
+    """
+    out: set[str] = set()
+    for path in paths:
+        if os.path.isfile(path):
+            out.add(path)
+            continue
+        for root, dirs, files in os.walk(path):
+            dirs[:] = sorted(d for d in dirs if d not in _SKIP_DIRS
+                             and not d.startswith("."))
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    out.add(os.path.join(root, f))
+    return sorted(out)
+
+
+def _relpath(path: str) -> str:
+    rel = os.path.relpath(path)
+    return rel.replace(os.sep, "/")
+
+
+def lint_file(path: str, *, select: Optional[set[str]] = None,
+              force_scope: bool = False) -> list[Diagnostic]:
+    """Lint one file; returns unsuppressed diagnostics (sorted)."""
+    load_rules()
+    rel = _relpath(path)
+    with open(path, encoding="utf-8") as fh:
+        source = fh.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [Diagnostic(rel, exc.lineno or 1, (exc.offset or 0) + 1,
+                           "PALP999", f"syntax error: {exc.msg}")]
+    ctx = FileContext(path=rel, source=source, tree=tree)
+    sup = Suppressions.parse(source)
+    diags: list[Diagnostic] = sup.meta_diagnostics(rel)
+    for code, rule in sorted(RULES.items()):
+        if select is not None and code not in select:
+            continue
+        if not force_scope and not rule.scope(rel):
+            continue
+        for d in rule.check(ctx):
+            if not sup.is_suppressed(d.code, d.line):
+                diags.append(d)
+    return sorted(diags)
+
+
+def run_rule(code: str, path: str) -> list[Diagnostic]:
+    """Run a single rule on a file regardless of path scoping (the
+    fixture-test entry point)."""
+    return lint_file(path, select={code}, force_scope=True)
+
+
+def fix_file(path: str) -> int:
+    """Apply every registered fixer to one file; returns edit count."""
+    load_rules()
+    rel = _relpath(path)
+    with open(path, encoding="utf-8") as fh:
+        source = fh.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError:
+        return 0
+    ctx = FileContext(path=rel, source=source, tree=tree)
+    edits = []
+    for code, rule in sorted(RULES.items()):
+        if rule.fixer is None or not rule.scope(rel):
+            continue
+        edits.extend(rule.fixer(ctx))
+    if not edits:
+        return 0
+    # apply back-to-front; drop overlaps (first wins)
+    edits.sort(key=lambda e: (e[0], e[1]))
+    pruned, last_start = [], None
+    for a, b, repl in reversed(edits):
+        if last_start is not None and b > last_start:
+            continue
+        pruned.append((a, b, repl))
+        last_start = a
+    new = source
+    for a, b, repl in pruned:
+        new = new[:a] + repl + new[b:]
+    if new != source:
+        with open(path, "w", encoding="utf-8") as fh:
+            fh.write(new)
+    return len(pruned)
+
+
+def _rules_digest() -> str:
+    """Hash of the palplint implementation itself: cache keys must
+    change whenever any rule changes."""
+    h = hashlib.sha256()
+    pkg = os.path.dirname(os.path.abspath(__file__))
+    for root, dirs, files in os.walk(pkg):
+        dirs[:] = sorted(d for d in dirs if d != "__pycache__")
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+class ResultCache:
+    """Content-addressed per-file diagnostic cache (used by CI)."""
+
+    def __init__(self, path: str) -> None:
+        self.path = path
+        self.digest = _rules_digest()
+        self.files: dict[str, dict] = {}
+        try:
+            with open(path, encoding="utf-8") as fh:
+                data = json.load(fh)
+            if data.get("digest") == self.digest:
+                self.files = data.get("files", {})
+        except (OSError, ValueError):
+            pass
+
+    @staticmethod
+    def _sha(source: bytes) -> str:
+        return hashlib.sha256(source).hexdigest()
+
+    def get(self, path: str) -> Optional[list[Diagnostic]]:
+        rel = _relpath(path)
+        entry = self.files.get(rel)
+        if entry is None:
+            return None
+        try:
+            with open(path, "rb") as fh:
+                if self._sha(fh.read()) != entry["sha"]:
+                    return None
+        except OSError:
+            return None
+        return [Diagnostic(**d) for d in entry["diags"]]
+
+    def put(self, path: str, diags: list[Diagnostic]) -> None:
+        rel = _relpath(path)
+        with open(path, "rb") as fh:
+            sha = self._sha(fh.read())
+        self.files[rel] = {"sha": sha,
+                           "diags": [d.to_json() for d in diags]}
+
+    def save(self) -> None:
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(self.path, "w", encoding="utf-8") as fh:
+            json.dump({"digest": self.digest, "files": self.files}, fh)
+
+
+def lint_paths(paths: Iterable[str], *,
+               select: Optional[set[str]] = None,
+               force_scope: bool = False,
+               cache: Optional[ResultCache] = None,
+               ) -> tuple[list[Diagnostic], int]:
+    """Lint all files under ``paths``; returns (diagnostics, n_files).
+
+    The cache is only consulted for full-default runs (no select /
+    force_scope), because cached entries record default-run results.
+    """
+    files = iter_python_files(paths)
+    cacheable = cache is not None and select is None and not force_scope
+    diags: list[Diagnostic] = []
+    for f in files:
+        cached = cache.get(f) if cacheable else None
+        if cached is not None:
+            diags.extend(cached)
+            continue
+        found = lint_file(f, select=select, force_scope=force_scope)
+        diags.extend(found)
+        if cacheable:
+            cache.put(f, found)
+    if cacheable:
+        cache.save()
+    return sorted(diags), len(files)

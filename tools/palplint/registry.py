@@ -1,0 +1,60 @@
+"""Rule registry: every rule self-registers at import time.
+
+A rule is a pure function over a parsed file plus metadata: a stable
+``PALP0xx`` code, a path-scope predicate (rules only fire inside the
+subtree whose conventions they encode), and an optional fixer for the
+mechanical subset (``--fix``).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Optional
+
+from .diagnostics import Diagnostic
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Everything a rule may look at for one file."""
+
+    path: str          # repo-relative posix path (used for scoping)
+    source: str
+    tree: ast.Module
+
+    def segment(self, node: ast.AST) -> str:
+        return ast.get_source_segment(self.source, node) or ""
+
+
+#: a fix is a (start_offset, end_offset, replacement) splice over the
+#: file's source text; the engine applies non-overlapping fixes only
+Edit = tuple[int, int, str]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    name: str
+    family: str
+    summary: str
+    scope: Callable[[str], bool]
+    check: Callable[[FileContext], list[Diagnostic]]
+    fixer: Optional[Callable[[FileContext], list[Edit]]] = None
+
+
+RULES: dict[str, Rule] = {}
+
+
+def register(rule: Rule) -> Rule:
+    if rule.code in RULES:
+        raise ValueError(f"duplicate rule code {rule.code}")
+    RULES[rule.code] = rule
+    return rule
+
+
+def load_rules() -> dict[str, Rule]:
+    """Import the rule modules (idempotent) and return the registry."""
+    from . import rules  # noqa: F401  (import populates RULES)
+
+    return RULES

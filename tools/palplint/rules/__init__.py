@@ -1,0 +1,7 @@
+"""Importing this package registers every rule (see registry.RULES)."""
+
+from __future__ import annotations
+
+from . import determinism, futures, tracer  # noqa: F401
+
+__all__ = ["determinism", "futures", "tracer"]

@@ -1,0 +1,400 @@
+"""Determinism family: PALP001 wall-clock, PALP002 unseeded RNG,
+PALP003 unordered-set iteration.
+
+Scope: simulation code — ``src/repro/core/``, ``benchmarks/``,
+``tests/``.  The simulation runs on a virtual ``Clock``; results must
+be bit-identical across hosts and runs, so wall-clock reads, global RNG
+state, and set-iteration order are all bugs waiting for a different
+machine.  ``benchmarks/common.py`` is the one sanctioned timing harness
+and is excluded from PALP001.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..astutil import ImportMap, call_name, walk_own
+from ..diagnostics import Diagnostic
+from ..registry import Edit, FileContext, Rule, register
+
+DETERMINISM_PREFIXES = ("src/repro/core/", "benchmarks/", "tests/")
+
+
+def _in_scope(path: str) -> bool:
+    return path.startswith(DETERMINISM_PREFIXES)
+
+
+def _clock_scope(path: str) -> bool:
+    # common.py hosts bench_cli + the wall_clock() accessor: it is the
+    # sanctioned place where real time enters the repo
+    return _in_scope(path) and path != "benchmarks/common.py"
+
+
+# ---------------------------------------------------------------- PALP001
+
+WALL_CLOCK = {
+    "time.time", "time.time_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "time.monotonic", "time.monotonic_ns",
+    "time.process_time", "time.process_time_ns",
+    "time.sleep",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+
+#: Call-site rewrite targets for ``--fix`` under benchmarks/: the bench
+#: harness owns real time, so timing reads route through its accessor.
+_FIXABLE_CLOCK = {"time.time", "time.perf_counter", "time.monotonic"}
+
+
+def _check_wall_clock(ctx: FileContext) -> list[Diagnostic]:
+    imap = ImportMap(ctx.tree)
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.Attribute, ast.Name)):
+            continue
+        if isinstance(node, ast.Name) and not isinstance(
+                node.ctx, ast.Load):
+            continue
+        qn = imap.qualname(node)
+        if qn in WALL_CLOCK:
+            # only report the outermost matching chain once: an
+            # Attribute's .value Name/Attribute never resolves to a
+            # banned *function* qualname, so no dedupe needed
+            out.append(Diagnostic(
+                ctx.path, node.lineno, node.col_offset + 1, "PALP001",
+                f"wall-clock access `{qn}` in virtual-clock scope; use "
+                "the simulation Clock (or benchmarks.common.wall_clock "
+                "in the bench harness)"))
+    return out
+
+
+def _fix_wall_clock(ctx: FileContext) -> list[Edit]:
+    """benchmarks/ only: rewrite `time.<fn>()` calls to `wall_clock()`."""
+    if not ctx.path.startswith("benchmarks/"):
+        return []
+    from ..astutil import line_starts, offset_of
+
+    imap = ImportMap(ctx.tree)
+    starts = line_starts(ctx.source)
+    edits: list[Edit] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call) or node.args or node.keywords:
+            continue
+        qn = imap.qualname(node.func)
+        if qn in _FIXABLE_CLOCK:
+            a = offset_of(starts, node.func.lineno, node.func.col_offset)
+            b = offset_of(starts, node.func.end_lineno,
+                          node.func.end_col_offset)
+            edits.append((a, b, "wall_clock"))
+    if edits:
+        edits.append(_ensure_import(
+            ctx, "from .common import wall_clock",
+            marker="wall_clock"))
+    return [e for e in edits if e is not None]
+
+
+def _ensure_import(ctx: FileContext, stmt: str, marker: str):
+    """Edit inserting ``stmt`` after the last top-level import, or None
+    if ``marker`` is already bound in the module."""
+    from ..astutil import line_starts, offset_of
+
+    last_import_end = 0
+    for node in ctx.tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            for a in node.names:
+                if (a.asname or a.name.split(".")[-1]) == marker:
+                    return None
+            last_import_end = node.end_lineno
+    starts = line_starts(ctx.source)
+    if last_import_end >= len(starts):
+        pos = len(ctx.source)
+    else:
+        pos = offset_of(starts, last_import_end + 1, 0)
+    return (pos, pos, stmt + "\n")
+
+
+register(Rule(
+    code="PALP001",
+    name="wall-clock-in-sim",
+    family="determinism",
+    summary=("no time.time/perf_counter/datetime.now in virtual-clock "
+             "scope (benchmarks/common.py is the sanctioned harness)"),
+    scope=_clock_scope,
+    check=_check_wall_clock,
+    fixer=_fix_wall_clock,
+))
+
+
+# ---------------------------------------------------------------- PALP002
+
+#: numpy.random entry points that *construct seeded state* are fine;
+#: everything else on the module is legacy global-state RNG
+_NP_SEEDED = {"default_rng", "Generator", "SeedSequence", "PCG64",
+              "Philox", "SFC64", "MT19937", "BitGenerator", "RandomState"}
+#: stdlib random: only the seedable class constructor is allowed
+_STDLIB_OK = {"Random", "SystemRandom"}
+
+_NP_FIXMAP = {
+    # legacy fn -> Generator method (same argument shape)
+    "random": "random", "random_sample": "random",
+    "randint": "integers", "integers": "integers",
+    "choice": "choice", "shuffle": "shuffle",
+    "permutation": "permutation",
+    "uniform": "uniform", "normal": "normal",
+    "standard_normal": "standard_normal",
+    "exponential": "exponential", "poisson": "poisson",
+    "beta": "beta", "gamma": "gamma", "geometric": "geometric",
+    "zipf": "zipf",
+}
+#: legacy fns taking *d1, d2, ...* dims that become one shape tuple
+_NP_DIMS_TO_SHAPE = {"rand": "random", "randn": "standard_normal"}
+
+
+def _check_unseeded_rng(ctx: FileContext) -> list[Diagnostic]:
+    imap = ImportMap(ctx.tree)
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        qn = imap.qualname(node.func)
+        if qn is None:
+            continue
+        if qn.startswith("numpy.random."):
+            fn = qn.rsplit(".", 1)[1]
+            if fn == "seed":
+                out.append(Diagnostic(
+                    ctx.path, node.lineno, node.col_offset + 1,
+                    "PALP002",
+                    "`np.random.seed` mutates global RNG state; pass a "
+                    "`default_rng(seed)` Generator instead"))
+            elif fn not in _NP_SEEDED:
+                out.append(Diagnostic(
+                    ctx.path, node.lineno, node.col_offset + 1,
+                    "PALP002",
+                    f"module-level `np.random.{fn}` draws from global "
+                    "state; use `np.random.default_rng(seed)`"))
+            elif fn == "default_rng" and not node.args:
+                out.append(Diagnostic(
+                    ctx.path, node.lineno, node.col_offset + 1,
+                    "PALP002",
+                    "`default_rng()` without a seed is entropy-seeded; "
+                    "pass an explicit seed"))
+        elif qn.startswith("random.") and qn.count(".") == 1:
+            fn = qn.rsplit(".", 1)[1]
+            if fn not in _STDLIB_OK:
+                out.append(Diagnostic(
+                    ctx.path, node.lineno, node.col_offset + 1,
+                    "PALP002",
+                    f"stdlib `random.{fn}` uses the shared global "
+                    "Random; instantiate `random.Random(seed)`"))
+    return out
+
+
+def _fix_unseeded_rng(ctx: FileContext) -> list[Edit]:
+    """Mechanical rewrite to seeded generators (seed 0 placeholder —
+    thread the real seed through afterwards)."""
+    from ..astutil import line_starts, offset_of
+
+    imap = ImportMap(ctx.tree)
+    starts = line_starts(ctx.source)
+    edits: list[Edit] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        qn = imap.qualname(node.func)
+        if not qn or not qn.startswith("numpy.random."):
+            continue
+        fn = qn.rsplit(".", 1)[1]
+        seg = ctx.segment(node.func)
+        if "." not in seg:
+            continue  # bare from-import name: not mechanically fixable
+        # whatever spells the numpy.random module at this call site
+        # ("np.random", "npr", ...) hosts default_rng
+        prefix = seg.rsplit(".", 1)[0]
+        a = offset_of(starts, node.func.lineno, node.func.col_offset)
+        b = offset_of(starts, node.func.end_lineno,
+                      node.func.end_col_offset)
+        if fn in _NP_FIXMAP:
+            new = f"{prefix}.default_rng(0).{_NP_FIXMAP[fn]}"
+            edits.append((a, b, new))
+        elif fn in _NP_DIMS_TO_SHAPE and not node.keywords:
+            dims = ", ".join(ctx.segment(x) for x in node.args)
+            shape = f"(({dims},))" if dims else "()"
+            end = offset_of(starts, node.end_lineno, node.end_col_offset)
+            new = (f"{prefix}.default_rng(0)."
+                   f"{_NP_DIMS_TO_SHAPE[fn]}{shape}")
+            edits.append((a, end, new))
+    return edits
+
+
+register(Rule(
+    code="PALP002",
+    name="unseeded-rng",
+    family="determinism",
+    summary=("no global-state RNG (`random.*`, module-level "
+             "`np.random.<fn>`); use `default_rng(seed)` / "
+             "`random.Random(seed)`"),
+    scope=_in_scope,
+    check=_check_unseeded_rng,
+    fixer=_fix_unseeded_rng,
+))
+
+
+# ---------------------------------------------------------------- PALP003
+
+#: reductions whose result is independent of iteration order
+_ORDER_FREE = {"sorted", "min", "max", "sum", "len", "any", "all",
+               "set", "frozenset"}
+#: repo-specific methods known to return sets
+_SET_RETURNING_METHODS = {"suspects"}
+_SET_OPS = (ast.BitOr, ast.BitAnd, ast.BitXor, ast.Sub)
+
+
+class _SetTracker:
+    """Best-effort 'is this expression a set?' within one scope."""
+
+    def __init__(self, set_attrs: set[str]) -> None:
+        self.set_attrs = set_attrs
+        self.local_sets: set[str] = set()
+
+    def learn(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            t = node.targets[0]
+            if isinstance(t, ast.Name):
+                if self.is_set(node.value):
+                    self.local_sets.add(t.id)
+                else:
+                    self.local_sets.discard(t.id)
+        elif isinstance(node, ast.AnnAssign) and isinstance(
+                node.target, ast.Name):
+            if _ann_is_set(node.annotation):
+                self.local_sets.add(node.target.id)
+
+    def is_set(self, node: ast.AST) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id in ("set", "frozenset"):
+                return True
+            if isinstance(fn, ast.Attribute):
+                if fn.attr in _SET_RETURNING_METHODS:
+                    return True
+                if fn.attr in ("difference", "union", "intersection",
+                               "symmetric_difference", "copy"):
+                    return self.is_set(fn.value)
+        if isinstance(node, ast.BinOp) and isinstance(node.op, _SET_OPS):
+            return self.is_set(node.left) or self.is_set(node.right)
+        if isinstance(node, ast.Name):
+            return node.id in self.local_sets
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"):
+            return node.attr in self.set_attrs
+        return False
+
+
+def _ann_is_set(ann: ast.AST) -> bool:
+    if isinstance(ann, ast.Name):
+        return ann.id in ("set", "frozenset")
+    if isinstance(ann, ast.Subscript):
+        return _ann_is_set(ann.value)
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return ann.value.lstrip().startswith(("set[", "set ", "set",
+                                              "frozenset"))
+    return False
+
+
+def _class_set_attrs(tree: ast.Module) -> set[str]:
+    """Attribute names assigned/annotated as sets anywhere in the file's
+    classes (coarse: one namespace for the whole file)."""
+    attrs: set[str] = set()
+    plain = _SetTracker(set())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            t = node.targets[0]
+            if (isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"
+                    and plain.is_set(node.value)):
+                attrs.add(t.attr)
+        elif isinstance(node, ast.AnnAssign):
+            t = node.target
+            if (isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"
+                    and _ann_is_set(node.annotation)):
+                attrs.add(t.attr)
+            elif isinstance(t, ast.Name) and _ann_is_set(node.annotation):
+                attrs.add(t.id)
+    return attrs
+
+
+def _check_set_iteration(ctx: FileContext) -> list[Diagnostic]:
+    set_attrs = _class_set_attrs(ctx.tree)
+    out = []
+
+    def flag(node: ast.AST, what: str) -> None:
+        out.append(Diagnostic(
+            ctx.path, node.lineno, node.col_offset + 1, "PALP003",
+            f"iteration over unordered set ({what}); wrap in "
+            "`sorted(...)` so order cannot reach output"))
+
+    def scan_scope(scope: ast.AST) -> None:
+        tracker = _SetTracker(set_attrs)
+        order_free_args: set[int] = set()
+        own = list(walk_own(scope))
+        # pass 1: learn set-typed bindings + mark order-free reduction
+        # arguments (whole-scope, so binding position can't hide a set)
+        for node in own:
+            tracker.learn(node)
+            if isinstance(node, ast.Call):
+                fn = node.func
+                name = fn.id if isinstance(fn, ast.Name) else None
+                if name in _ORDER_FREE:
+                    for arg in node.args:
+                        order_free_args.add(id(arg))
+                        # a genexp over a set inside min(...) is fine too
+                        if isinstance(arg, ast.GeneratorExp):
+                            for gen in arg.generators:
+                                order_free_args.add(id(gen.iter))
+        # pass 2: flag order-sensitive iteration over known sets
+        for node in own:
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                if (tracker.is_set(node.iter)
+                        and id(node.iter) not in order_free_args):
+                    flag(node.iter, ctx.segment(node.iter) or "set")
+            elif isinstance(node, (ast.ListComp, ast.GeneratorExp,
+                                   ast.DictComp)):
+                for gen in node.generators:
+                    if (tracker.is_set(gen.iter)
+                            and id(gen.iter) not in order_free_args):
+                        flag(gen.iter, ctx.segment(gen.iter) or "set")
+            elif isinstance(node, ast.Call):
+                fn = node.func
+                name = fn.id if isinstance(fn, ast.Name) else None
+                ordered_sinks = name in ("list", "tuple", "enumerate")
+                join = isinstance(fn, ast.Attribute) and fn.attr == "join"
+                if (ordered_sinks or join) and node.args:
+                    arg = node.args[0]
+                    if (tracker.is_set(arg)
+                            and id(arg) not in order_free_args):
+                        flag(arg, ctx.segment(arg) or "set")
+
+    scan_scope(ctx.tree)
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scan_scope(node)
+    return out
+
+
+register(Rule(
+    code="PALP003",
+    name="unordered-set-iteration",
+    family="determinism",
+    summary=("no bare iteration over sets where order can reach output; "
+             "`sorted(...)` first (order-free reductions are exempt)"),
+    scope=_in_scope,
+    check=_check_set_iteration,
+))

@@ -1,0 +1,176 @@
+"""Futures/RPC-discipline family: PALP101 abandoned RPCFuture,
+PALP102 unbounded coordinator wait loop, PALP103 unguarded replica
+mutation.
+
+Scope: the cluster layer — ``backstore.py``, ``cluster.py``,
+``membership.py`` under ``src/repro/core/``.  These encode the
+protocols PR 5's ``LRUSpace.put`` coherence bug slipped past: a future
+issued but never consumed silently drops a read, a retry loop without
+an ``rpc_timeout`` bound can spin a coordinator forever under churn,
+and a replica-store write without a version comparison can resurrect
+stale data during read-repair or hint drains.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..astutil import call_name, functions, walk_own
+from ..diagnostics import Diagnostic
+from ..registry import FileContext, Rule, register
+
+_CLUSTER_FILES = (
+    "src/repro/core/backstore.py",
+    "src/repro/core/cluster.py",
+    "src/repro/core/membership.py",
+)
+
+
+def _cluster_scope(path: str) -> bool:
+    return path in _CLUSTER_FILES
+
+
+def _mutation_scope(path: str) -> bool:
+    # backstore.py is the standalone node: its `put` defines version-0
+    # semantics, so the guard requirement applies to replica paths only
+    return path in _CLUSTER_FILES[1:]
+
+
+# ---------------------------------------------------------------- PALP101
+
+_RPC_ISSUERS = {"get_async", "multi_get_async"}
+
+
+def _check_abandoned_future(ctx: FileContext) -> list[Diagnostic]:
+    out = []
+    for fn in functions(ctx.tree):
+        # candidates: own-scope statements only (a nested def has its
+        # own pass); loads: whole subtree (closures consume futures)
+        candidates: dict[str, ast.AST] = {}
+        for node in walk_own(fn):
+            if (isinstance(node, ast.Expr)
+                    and isinstance(node.value, ast.Call)
+                    and call_name(node.value) in _RPC_ISSUERS):
+                out.append(Diagnostic(
+                    ctx.path, node.lineno, node.col_offset + 1,
+                    "PALP101",
+                    "RPCFuture discarded at the call site; bind it and "
+                    "`result()` it (or assign to `_abandoned_*` to "
+                    "abandon explicitly)"))
+            elif (isinstance(node, ast.Assign)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, ast.Call)
+                    and call_name(node.value) in _RPC_ISSUERS):
+                name = node.targets[0].id
+                if name == "_" or name.startswith("_abandoned"):
+                    continue  # explicit abandon
+                candidates[name] = node
+        if not candidates:
+            continue
+        loads = {n.id for n in ast.walk(fn)
+                 if isinstance(n, ast.Name)
+                 and isinstance(n.ctx, ast.Load)}
+        for name, node in sorted(candidates.items()):
+            if name not in loads:
+                out.append(Diagnostic(
+                    ctx.path, node.lineno, node.col_offset + 1,
+                    "PALP101",
+                    f"RPCFuture `{name}` is never consumed on any path; "
+                    "`result()`/`value()` it or rename to "
+                    "`_abandoned_*`"))
+    return out
+
+
+register(Rule(
+    code="PALP101",
+    name="abandoned-rpc-future",
+    family="futures",
+    summary=("every RPCFuture from get_async/multi_get_async is "
+             "consumed or explicitly abandoned (`_abandoned_*`)"),
+    scope=_cluster_scope,
+    check=_check_abandoned_future,
+))
+
+
+# ---------------------------------------------------------------- PALP102
+
+#: identifiers marking a loop as coordinator retry machinery
+_RETRY_MARKERS = {"get_async", "multi_get_async", "background_get",
+                  "_fresh_replicas", "_note_timeout", "crashed"}
+
+
+def _idents(node: ast.AST):
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            yield n.id
+        elif isinstance(n, ast.Attribute):
+            yield n.attr
+
+
+def _check_unbounded_wait(ctx: FileContext) -> list[Diagnostic]:
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.While):
+            continue
+        idents = set(_idents(node))
+        if idents & _RETRY_MARKERS and "rpc_timeout" not in idents:
+            out.append(Diagnostic(
+                ctx.path, node.lineno, node.col_offset + 1, "PALP102",
+                "coordinator RPC wait loop has no `rpc_timeout` bound; "
+                "a dead replica can spin this loop forever"))
+    return out
+
+
+register(Rule(
+    code="PALP102",
+    name="unbounded-rpc-wait",
+    family="futures",
+    summary=("every coordinator RPC retry loop bounds waiting by "
+             "`rpc_timeout`"),
+    scope=_cluster_scope,
+    check=_check_unbounded_wait,
+))
+
+
+# ---------------------------------------------------------------- PALP103
+
+def _check_unguarded_mutation(ctx: FileContext) -> list[Diagnostic]:
+    out = []
+    for fn in functions(ctx.tree):
+        has_version_ref = any(
+            (isinstance(n, ast.Attribute) and n.attr == "versions")
+            or (isinstance(n, ast.Name) and n.id == "versions")
+            for n in ast.walk(fn))
+        if has_version_ref:
+            continue
+        for node in walk_own(fn):
+            targets: list[ast.AST] = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AugAssign):
+                targets = [node.target]
+            for t in targets:
+                if (isinstance(t, ast.Subscript)
+                        and isinstance(t.value, ast.Attribute)
+                        and t.value.attr == "data"):
+                    out.append(Diagnostic(
+                        ctx.path, node.lineno, node.col_offset + 1,
+                        "PALP103",
+                        "store mutation without a version comparison in "
+                        "the enclosing function (the PR 5 LRUSpace.put "
+                        "bug class); compare/assign `versions[...]` or "
+                        "justify a suppression"))
+    return out
+
+
+register(Rule(
+    code="PALP103",
+    name="unguarded-store-mutation",
+    family="futures",
+    summary=("replica `*.data[...]` writes carry a `versions` "
+             "comparison in the same function (read-repair/handoff "
+             "staleness guard)"),
+    scope=_mutation_scope,
+    check=_check_unguarded_mutation,
+))

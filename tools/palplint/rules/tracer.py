@@ -1,0 +1,263 @@
+"""Tracer-safety family: PALP201 traced-value coercion, PALP202
+numpy-in-jit, PALP203 kernel entry-point discipline.
+
+Scope: the accelerator layer — everything under ``src/`` for the traced
+-body rules (they only fire inside ``@jax.jit`` / ``pl.pallas_call``
+bodies), and ``src/repro/kernels/*/ops.py`` for the entry-point rule.
+
+Inside a traced body, ``float(x)``/``int(x)``/``bool(x)`` on a tracer
+raises ``ConcretizationTypeError`` at best and silently bakes in a
+constant at worst, and ``np.<fn>`` on a ``jnp`` array forces a host
+round-trip that breaks tracing.  Kernel public entry points must take
+an ``interpret`` escape hatch (CPU CI has no TPU) and pad their inputs
+to block multiples before dispatch.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Tuple
+
+from ..astutil import ImportMap
+from ..diagnostics import Diagnostic
+from ..registry import FileContext, Rule, register
+
+
+def _src_scope(path: str) -> bool:
+    return path.startswith("src/")
+
+
+def _ops_scope(path: str) -> bool:
+    return (path.startswith("src/repro/kernels/")
+            and path.endswith("/ops.py"))
+
+
+# ------------------------------------------------- traced-context finder
+
+def _is_jit_expr(node: ast.AST, imap: ImportMap) -> bool:
+    qn = imap.qualname(node)
+    return qn in ("jax.jit", "jax.jit.jit") or (
+        qn is not None and qn.endswith(".jit")) or (
+        isinstance(node, ast.Name) and node.id == "jit")
+
+
+def _static_argnames(dec: ast.Call) -> set[str]:
+    for kw in dec.keywords:
+        if kw.arg == "static_argnames" and isinstance(
+                kw.value, (ast.Tuple, ast.List)):
+            return {e.value for e in kw.value.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)}
+    return set()
+
+
+def _jit_decorated(fn: ast.FunctionDef,
+                   imap: ImportMap) -> "Optional[set[str]]":
+    """Returns the decorator's static_argnames if jit-decorated, else
+    None (so callers can exempt coercions of static parameters)."""
+    for dec in fn.decorator_list:
+        if _is_jit_expr(dec, imap):
+            return set()
+        if isinstance(dec, ast.Call):
+            # @jax.jit(...) or @functools.partial(jax.jit, ...)
+            if _is_jit_expr(dec.func, imap):
+                return _static_argnames(dec)
+            qn = imap.qualname(dec.func)
+            if (qn in ("functools.partial", "partial")
+                    or (isinstance(dec.func, ast.Name)
+                        and dec.func.id == "partial")):
+                if dec.args and _is_jit_expr(dec.args[0], imap):
+                    return _static_argnames(dec)
+    return None
+
+
+def _traced_contexts(
+        tree: ast.Module,
+        imap: ImportMap) -> Iterator[Tuple[ast.AST, set]]:
+    """Function bodies traced by jax, with their static argnames:
+    jit-decorated defs, kernels passed to ``pl.pallas_call``,
+    names/lambdas passed to ``jax.jit(...)``."""
+    by_name: dict[str, list[ast.FunctionDef]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, []).append(node)
+    seen: set[int] = set()
+
+    def emit(fn: ast.AST, statics: set) -> Iterator[Tuple[ast.AST, set]]:
+        if id(fn) not in seen:
+            seen.add(id(fn))
+            yield fn, statics
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            statics = _jit_decorated(node, imap)
+            if statics is not None:
+                yield from emit(node, statics)
+        elif isinstance(node, ast.Call):
+            qn = imap.qualname(node.func)
+            if qn is not None and qn.endswith("pallas_call"):
+                if node.args and isinstance(node.args[0], ast.Name):
+                    for fn in by_name.get(node.args[0].id, []):
+                        yield from emit(fn, set())
+            elif _is_jit_expr(node.func, imap) and node.args:
+                arg = node.args[0]
+                if isinstance(arg, ast.Lambda):
+                    yield from emit(arg, set())
+                elif isinstance(arg, ast.Name):
+                    for fn in by_name.get(arg.id, []):
+                        yield from emit(fn, set())
+
+
+# ---------------------------------------------------------------- PALP201
+
+def _coercion_allowed(arg: ast.AST) -> bool:
+    """Static-shape coercions are fine: constants, `.shape` math, len()."""
+    if isinstance(arg, ast.Constant):
+        return True
+    for n in ast.walk(arg):
+        if isinstance(n, ast.Attribute) and n.attr in ("shape", "ndim",
+                                                       "size", "dtype"):
+            return True
+        if (isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+                and n.func.id == "len"):
+            return True
+    return False
+
+
+def _check_traced_coercion(ctx: FileContext) -> list[Diagnostic]:
+    imap = ImportMap(ctx.tree)
+    out = []
+    for scope, statics in _traced_contexts(ctx.tree, imap):
+        for node in ast.walk(scope):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in ("float", "int", "bool")
+                    and len(node.args) == 1
+                    and not _coercion_allowed(node.args[0])
+                    and not (isinstance(node.args[0], ast.Name)
+                             and node.args[0].id in statics)):
+                out.append(Diagnostic(
+                    ctx.path, node.lineno, node.col_offset + 1,
+                    "PALP201",
+                    f"`{node.func.id}()` on a traced value inside a "
+                    "jit/pallas body concretizes the tracer; use jnp "
+                    "ops or hoist to a static argument"))
+    return out
+
+
+register(Rule(
+    code="PALP201",
+    name="traced-value-coercion",
+    family="tracer",
+    summary=("no float()/int()/bool() on traced values inside "
+             "@jax.jit / pallas kernel bodies (shape/len math exempt)"),
+    scope=_src_scope,
+    check=_check_traced_coercion,
+))
+
+
+# ---------------------------------------------------------------- PALP202
+
+#: numpy calls that are static metadata, not array ops
+_NP_STATIC_OK = {"iinfo", "finfo", "dtype", "result_type",
+                 "promote_types", "can_cast"}
+
+
+def _check_np_in_jit(ctx: FileContext) -> list[Diagnostic]:
+    imap = ImportMap(ctx.tree)
+    out = []
+    for scope, _statics in _traced_contexts(ctx.tree, imap):
+        for node in ast.walk(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            qn = imap.qualname(node.func)
+            if not qn or not qn.startswith("numpy."):
+                continue
+            if qn.startswith("numpy.random."):
+                continue  # PALP002's department
+            fn = qn.split(".", 1)[1]
+            if fn.split(".")[0] in _NP_STATIC_OK:
+                continue
+            out.append(Diagnostic(
+                ctx.path, node.lineno, node.col_offset + 1, "PALP202",
+                f"`np.{fn}` call inside a jit/pallas body forces a "
+                "host round-trip; use the jnp equivalent"))
+    return out
+
+
+register(Rule(
+    code="PALP202",
+    name="numpy-in-traced-body",
+    family="tracer",
+    summary=("no `np.` array ops inside @jax.jit / pallas kernel "
+             "bodies (static metadata like np.iinfo exempt)"),
+    scope=_src_scope,
+    check=_check_np_in_jit,
+))
+
+
+# ---------------------------------------------------------------- PALP203
+
+def _module_all(tree: ast.Module) -> list[str]:
+    for node in tree.body:
+        if (isinstance(node, ast.Assign)
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "__all__"
+                and isinstance(node.value, (ast.List, ast.Tuple))):
+            return [e.value for e in node.value.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)]
+    return []
+
+
+def _check_ops_discipline(ctx: FileContext) -> list[Diagnostic]:
+    exported = set(_module_all(ctx.tree))
+    # names imported from sibling kernel modules (relative imports)
+    sibling_names: set[str] = set()
+    for node in ctx.tree.body:
+        if isinstance(node, ast.ImportFrom) and node.level:
+            for a in node.names:
+                sibling_names.add(a.asname or a.name)
+    out = []
+    for node in ctx.tree.body:
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        if exported and node.name not in exported:
+            continue
+        calls = {n.func.id for n in ast.walk(node)
+                 if isinstance(n, ast.Call)
+                 and isinstance(n.func, ast.Name)}
+        if not (calls & sibling_names):
+            continue  # not a dispatching entry point
+        params = {a.arg for a in (node.args.args
+                                  + node.args.kwonlyargs
+                                  + node.args.posonlyargs)}
+        if "interpret" not in params:
+            out.append(Diagnostic(
+                ctx.path, node.lineno, node.col_offset + 1, "PALP203",
+                f"kernel entry point `{node.name}` has no `interpret` "
+                "escape hatch (CPU CI and debugging need one)"))
+        pads = any(
+            isinstance(n, ast.Call) and (
+                (isinstance(n.func, ast.Name) and "pad" in n.func.id)
+                or (isinstance(n.func, ast.Attribute)
+                    and "pad" in n.func.attr))
+            for n in ast.walk(node))
+        if not pads:
+            out.append(Diagnostic(
+                ctx.path, node.lineno, node.col_offset + 1, "PALP203",
+                f"kernel entry point `{node.name}` does not pad inputs "
+                "to a block multiple before dispatch"))
+    return out
+
+
+register(Rule(
+    code="PALP203",
+    name="kernel-entry-discipline",
+    family="tracer",
+    summary=("every exported kernels/*/ops.py entry point takes "
+             "`interpret` and pads to block multiples before dispatch"),
+    scope=_ops_scope,
+    check=_check_ops_discipline,
+))
