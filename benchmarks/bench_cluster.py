@@ -33,6 +33,20 @@ verdict and hinted handoffs converge every replica byte-identically.
   cluster_detect_verdicts                   — suspected/cleared/converged
                                               flags + discovery cost
 
+The drain sweep decommissions a live node with ``drain_node`` while a
+read loop hammers its keys: copy-then-cutover under a lease means the
+stale-read counter must not move during the window.
+
+  cluster_drain — zero_stale flag + streamed volume + reads in window
+
+The chaos sweep runs the ``tools.chaoscheck`` invariant audit over a
+seeded schedule grid (partitions, link drops/dups/delays, crashes, clock
+skew) and exports each invariant as a deterministic 1.0 flag, plus the
+byte-identical-replay flag for seed 0.
+
+  cluster_chaos_{converged,causal,hint_conserved,quorum_safe,
+                 replay_identical} — invariant flags over the seed grid
+
 CLI::
 
     python -m benchmarks.bench_cluster --quick \
@@ -303,12 +317,95 @@ def detection_sweep(quick: bool = True, results: dict | None = None) -> dict:
     return results
 
 
+def drain_sweep(quick: bool = True, results: dict | None = None) -> dict:
+    """Planned decommission under read load: ``drain_node`` pre-streams
+    the leaving node's ranges under a lease while the node keeps serving,
+    so the coordinator's stale-read counter must not move during the
+    window.  ``cluster_drain_zero_stale`` is the deterministic 1.0 flag
+    the perf gate refuses to let regress."""
+    results = {} if results is None else results
+    n_shards = 4
+    gen = TPCC(TPCCConfig())
+    store = ShardedDKVStore(
+        n_shards, latencies=degraded_latencies(n_shards, factor=1.0),
+        replication=2, write_mode="quorum", read_quorum=2,
+        failure_detection=True)
+    data = gen.dataset()
+    t = 0.0
+    for k, v in data:
+        t += 2e-5
+        store.put(k, v, t)
+    hot = [k for k, _ in data[::31]]
+    reads = {"n": 0}
+
+    def on_batch(tb: float) -> None:
+        for k in hot:
+            store.get_async(k, tb)
+            reads["n"] += 1
+
+    report = store.drain_node(n_shards - 1, now=store.frontier(),
+                              on_batch=on_batch)
+    zero_stale = float(report.stale_reads_during == 0)
+    results["cluster_drain_zero_stale"] = zero_stale
+    results["cluster_drain_reads_during"] = float(reads["n"])
+    row("cluster_drain", report.keys_streamed,
+        zero_stale=zero_stale, reads_during=reads["n"],
+        stale_reads_during=report.stale_reads_during,
+        keys_streamed=report.keys_streamed,
+        bytes_streamed=report.bytes_streamed, kind=report.kind)
+    return results
+
+
+def chaos_sweep(quick: bool = True, results: dict | None = None) -> dict:
+    """Seeded fault-schedule audit (the ``chaos-smoke`` invariants as
+    bench flags): every schedule in the grid must converge, lose no acked
+    write, balance the hint ledger, and never serve a stale strict-quorum
+    read; seed 0 must also replay byte-identically.  Each flag is a
+    deterministic 1.0 gated like a hit ratio."""
+    from tools.chaoscheck import check_replay, run_schedule
+
+    results = {} if results is None else results
+    seeds = range(2) if quick else range(5)
+    tags = {"converged": ("divergent replicas", "stray copy"),
+            "causal": ("acked write",),
+            "hint_conserved": ("hint ledger", "hints post-heal"),
+            "quorum_safe": ("stale strict-quorum",)}
+    held = {name: True for name in tags}
+    siblings = merges = unavailable = 0
+    chaos_totals = {"dropped": 0, "duplicated": 0,
+                    "partition_blocks": 0, "delayed": 0}
+    for seed in seeds:
+        report = run_schedule(seed, quick=quick)
+        for name, needles in tags.items():
+            if any(any(n in e for n in needles) for e in report["errors"]):
+                held[name] = False
+        siblings += report["siblings_detected"]
+        merges += report["sibling_merges"]
+        unavailable += report["unavailable_writes"]
+        for k in chaos_totals:
+            chaos_totals[k] += report["chaos"][k]
+    replay = float(check_replay(0, quick=quick))
+    for name, ok in held.items():
+        results[f"cluster_chaos_{name}"] = float(ok)
+    results["cluster_chaos_replay_identical"] = replay
+    results["cluster_chaos_sibling_merges"] = float(merges)
+    row("cluster_chaos", float(len(seeds)),
+        seeds=len(seeds), replay_identical=replay,
+        siblings=siblings, sibling_merges=merges,
+        unavailable_writes=unavailable,
+        **{f"held_{k}": float(v) for k, v in held.items()},
+        **chaos_totals)
+    return results
+
+
 def main(quick: bool = True, results: dict | None = None) -> dict:
     results = {} if results is None else results
     static_sweep(quick, results)
     elastic_sweep(quick, results)
     degraded_sweep(quick, results)
     detection_sweep(quick, results)
+    drain_sweep(quick, results)
+    chaos_sweep(quick, results)
     return results
 
 
@@ -338,7 +435,11 @@ def check(results: dict, committed: dict, max_regression: float) -> list[str]:
     # the detection verdicts are deterministic 1.0 flags: suspicion must
     # land, clear, and converge — they gate like hit ratios
     ratio_keys = ("elastic_recovery_ratio", "cluster_detect_suspected",
-                  "cluster_detect_cleared", "cluster_detect_converged")
+                  "cluster_detect_cleared", "cluster_detect_converged",
+                  "cluster_drain_zero_stale", "cluster_chaos_converged",
+                  "cluster_chaos_causal", "cluster_chaos_hint_conserved",
+                  "cluster_chaos_quorum_safe",
+                  "cluster_chaos_replay_identical")
     for key, old in committed.items():
         new = results.get(key)
         if not isinstance(old, (int, float)) or \

@@ -8,6 +8,7 @@ back store used by the paper-fidelity benchmarks.
 
 from .backstore import Channel, Clock, LatencyModel, RPCFuture, SimulatedDKVStore
 from .cache import CacheStats, TwoSpaceCache
+from .chaos import ChaosEngine, ChaosSchedule, Fault
 from .cluster import (
     ClusterBaseline,
     ClusterClient,
@@ -15,6 +16,7 @@ from .cluster import (
     PatternExchange,
     ShardedDKVStore,
     ShardedTwoSpaceCache,
+    VerdictExchange,
 )
 from .decision import VectorizedPrefetchEngine, build_engine
 from .heuristics import HEURISTICS, HeuristicConfig, PrefetchEngine
@@ -28,7 +30,8 @@ from .membership import (
     MoveReport,
     RangeLease,
 )
-from .metastore import PatternMetastore
+from .metastore import PatternMetastore, VerdictBoard
+from .versions import DottedVersion, concurrent, descends, merge
 from .mining import (
     ALGORITHMS,
     BITMAP_ALGOS,
@@ -46,8 +49,9 @@ from .sessions import AccessLogger, Container, SequenceDatabase
 __all__ = [
     "AccessLogger", "ALGORITHMS", "BITMAP_ALGOS", "BaselineClient",
     "BudgetRebalancer",
-    "CacheStats", "Channel",
-    "Clock", "FailureDetector", "FlatForest", "HintedHandoffLog",
+    "CacheStats", "Channel", "ChaosEngine", "ChaosSchedule",
+    "Clock", "DottedVersion", "FailureDetector", "Fault", "FlatForest",
+    "HintedHandoffLog",
     "LeaseConflict",
     "LeaseTable", "MembershipEvent", "MoveReport", "RangeLease",
     "RPCFuture",
@@ -57,6 +61,8 @@ __all__ = [
     "PalpatineClient", "PalpatineConfig", "PrefetchEngine", "PTree",
     "PTreeIndex", "SequenceDatabase", "ShardedDKVStore",
     "ShardedTwoSpaceCache", "SimulatedDKVStore", "TwoSpaceCache",
-    "VectorizedPrefetchEngine", "VerticalBitmaps", "brute_force",
-    "build_engine", "mine", "mine_dynamic_minsup",
+    "VectorizedPrefetchEngine", "VerdictBoard", "VerdictExchange",
+    "VerticalBitmaps", "brute_force",
+    "build_engine", "concurrent", "descends", "merge",
+    "mine", "mine_dynamic_minsup",
 ]

@@ -112,6 +112,10 @@ class RPCFuture:
     #: replica retries the coordinator paid before this future resolved
     timed_out: bool = False
     retries: int = 0
+    #: the chaos engine dropped this message before it reached the node —
+    #: the sender sees exactly a timeout (no ack), but the node never
+    #: served it (no counters moved), so the coordinator must retry
+    dropped: bool = False
 
     def result(self) -> tuple[list, float]:
         return self.values, self.done_at
@@ -171,12 +175,15 @@ class SimulatedDKVStore:
                  demand_width: int = DEMAND_WIDTH):
         self.latency = latency or LatencyModel()
         self.data: dict[Any, bytes] = {}
-        #: per-key monotone write version, stamped by a replicating
-        #: front-end (ShardedDKVStore's put frontier).  Replicas whose
-        #: version for a key trails the newest are *stale* — the signal
-        #: read-repair and hinted-handoff draining converge on.  A
-        #: standalone node never populates it (absent == version 0).
-        self.versions: dict[Any, int] = {}
+        #: per-key write version, stamped by a replicating front-end
+        #: (ShardedDKVStore's put frontier).  Replicas whose version for a
+        #: key trails the newest are *stale* — the signal read-repair and
+        #: hinted-handoff draining converge on.  The node itself is
+        #: version-agnostic: values are ints (legacy monotone counters) or
+        #: ``repro.core.versions.DottedVersion`` objects, both totally
+        #: ordered, with absent == version 0.  A standalone node never
+        #: populates it.
+        self.versions: dict[Any, Any] = {}
         self.demand = Channel(demand_width)     # foreground RPC pipeline
         self.background = Channel(1)   # prefetch channel
         self.write_channel = Channel(1)  # write-behind channel (WAL path)
@@ -192,6 +199,15 @@ class SimulatedDKVStore:
         #: node lately" signal replica-aware routing steers by
         self.ewma_service: Optional[float] = None
         self._watchers: list[Callable[[Any], None]] = []
+        #: chaos injection hook (see ``repro.core.chaos``): when wired, the
+        #: RPC entry points below consult the engine for every message that
+        #: names its sender via ``src`` — partitions and drops surface as
+        #: ``RPCFuture.dropped`` / ``None`` acks, link delay lands on the
+        #: completion time.  These entry points are the *only* sanctioned
+        #: way for a coordinator to reach this node's channels (palplint
+        #: PALP104 flags direct ``Channel.issue`` sends that bypass them).
+        self.chaos = None
+        self.node_id: Optional[int] = None
 
     # channel aliases (pre-futures API surface, kept for tests/tools)
     @property
@@ -226,6 +242,24 @@ class SimulatedDKVStore:
         nothing is declared: the cluster notices via probe acks."""
         self.crashed = False
 
+    # -- chaos injection chokepoint ---------------------------------------
+    def connect_chaos(self, engine, node_id: int) -> None:
+        """Wire a ``ChaosEngine`` onto this node's RPC entry points."""
+        self.chaos = engine
+        self.node_id = node_id
+
+    def _chaos_send(self, now: float, src) -> tuple[bool, float, int]:
+        """Adjudicate one inbound message on the ``src -> this node`` link.
+
+        Returns ``(delivered, entry_time, duplicates)``.  Without a wired
+        engine or a named sender the message passes untouched — standalone
+        stores and legacy call sites pay nothing for the hook.
+        """
+        if self.chaos is None or src is None:
+            return True, now, 0
+        ok, delay, dups = self.chaos.on_send(now, src, self.node_id)
+        return ok, now + delay, dups
+
     # -- foreground (demand) path ----------------------------------------
     def _note_service(self, latency: float, n_items: int) -> None:
         per_item = latency / max(1, n_items)
@@ -254,18 +288,32 @@ class SimulatedDKVStore:
         self._note_service(lat, len(keys))
         return vals, lat
 
-    def get_async(self, key, now: float) -> RPCFuture:
+    def get_async(self, key, now: float, src=None) -> RPCFuture:
         """Issue a demand read on the node's RPC pipeline; never blocks.
         The future's ``done_at`` accounts queueing behind other in-flight
         demand reads (handler-pool contention)."""
+        ok, entry, dups = self._chaos_send(now, src)
+        if not ok:
+            return RPCFuture((key,), [None], now, now, done_each=[now],
+                             timed_out=True, dropped=True)
         v, lat = self.get(key)
-        done = self.demand.issue(now, lat)
+        done = self.demand.issue(entry, lat)
+        for _ in range(dups):  # duplicate delivery: wasted handler service
+            self.demand.issue(entry, lat)
         return RPCFuture((key,), [v], now, done, done_each=[done])
 
-    def multi_get_async(self, keys: Sequence, now: float) -> RPCFuture:
+    def multi_get_async(self, keys: Sequence, now: float,
+                        src=None) -> RPCFuture:
         """Batched demand read as one pipelined RPC."""
+        ok, entry, dups = self._chaos_send(now, src)
+        if not ok:
+            return RPCFuture(tuple(keys), [None] * len(keys), now, now,
+                             done_each=[now] * len(keys),
+                             timed_out=True, dropped=True)
         vals, lat = self.multi_get(keys)
-        done = self.demand.issue(now, lat)
+        done = self.demand.issue(entry, lat)
+        for _ in range(dups):
+            self.demand.issue(entry, lat)
         return RPCFuture(tuple(keys), vals, now, done,
                          done_each=[done] * len(keys))
 
@@ -289,13 +337,20 @@ class SimulatedDKVStore:
         """Outstanding work queued on the background channel, in seconds."""
         return self.background.backlog(now)
 
-    def background_get(self, keys: Sequence, now: float) -> tuple[list, float]:
+    def background_get(self, keys: Sequence, now: float,
+                       src=None) -> tuple[list, float]:
         """Issue a batched get on the background channel at virtual time
         ``now``; returns (values, completion_time).  Does not touch the
         demand-service EWMA: amortized batch service would make prefetch-
-        heavy nodes look faster to demand routing than they are."""
+        heavy nodes look faster to demand routing than they are.  A chaos
+        drop sheds the whole batch and returns ``(None, now)`` — distinct
+        from a backlog-cap shed's ``[None, ...]`` values so the caller can
+        feed the missed ack to its failure detector."""
+        ok, entry, _ = self._chaos_send(now, src)
+        if not ok:
+            return None, now
         vals, lat = self._serve(keys)
-        return vals, self.background.issue(now, lat)
+        return vals, self.background.issue(entry, lat)
 
     def background_multi_get(
         self, keys: Sequence, now: float, backlog_cap: Optional[float] = None
@@ -310,16 +365,61 @@ class SimulatedDKVStore:
         vals, done = self.background_get(keys, now)
         return vals, [done] * len(keys)
 
-    def put(self, key, value: bytes, now: float) -> float:
+    def put(self, key, value: bytes, now: float, src=None) -> Optional[float]:
         """Async write-behind: returns completion time on the write channel
         (the store's WAL path — writes never contend with prefetch reads);
-        the caller does not block."""
+        the caller does not block.  Returns ``None`` when the chaos engine
+        dropped the message — the write never reached this node, the
+        coordinator sees a missed ack and must hint/retry."""
+        ok, entry, dups = self._chaos_send(now, src)
+        if not ok:
+            return None
         self.data[key] = value
         lat = self.latency.put(1, len(value))
-        done = self.write_channel.issue(now, lat)
+        done = self.write_channel.issue(entry, lat)
+        for _ in range(dups):  # duplicate delivery: idempotent re-apply
+            self.write_channel.issue(entry, lat)
         for w in self._watchers:
             w(key)
         return done
+
+    def apply_replica_write(self, key, value: bytes, version,
+                            now: float, src=None) -> Optional[float]:
+        """Install a *replicated* write — value and version together, as one
+        message — on this node's write channel.  This is the sanctioned
+        chokepoint for read-repair, hinted-handoff drains, and any other
+        coordinator-to-replica transfer (PALP104 flags the direct-channel
+        sends this replaces).  Returns the completion time, or ``None``
+        when chaos dropped the message (nothing applied)."""
+        ok, entry, dups = self._chaos_send(now, src)
+        if not ok:
+            return None
+        self.data[key] = value
+        self.versions[key] = version
+        lat = self.latency.put(1, len(value))
+        done = self.write_channel.issue(entry, lat)
+        for _ in range(dups):
+            self.write_channel.issue(entry, lat)
+        # deliberately no watcher fire: repair/drain installs the value
+        # clients already observed at write time — no invalidation storm
+        return done
+
+    def bulk_apply(self, items: Sequence[tuple], now: float,
+                   src=None) -> Optional[float]:
+        """Install a batch of ``(key, value, version)`` records as one
+        streamed message on the write channel (membership range transfers).
+        One latency charge for the whole batch; ``None`` on a chaos drop
+        (the stream batch must be resent)."""
+        ok, entry, _ = self._chaos_send(now, src)
+        if not ok:
+            return None
+        nbytes = 0
+        for key, value, version in items:
+            self.data[key] = value
+            self.versions[key] = version
+            nbytes += len(value)
+        lat = self.latency.put(len(items), nbytes)
+        return self.write_channel.issue(entry, lat)
 
     # -- coherence monitor (co-processor / trigger stand-in, §4.4) --------
     def watch(self, callback: Callable[[Any], None]) -> None:

@@ -78,6 +78,7 @@ __all__ = [
     "build_ring",
     "add_node",
     "remove_node",
+    "drain_node",
 ]
 
 #: keys per streamed range batch (one background-channel read + one bulk
@@ -122,6 +123,10 @@ class MoveReport:
     replication: int
     started_at: float
     done_at: float             # when the last range batch landed
+    #: stale reads the coordinator counted while this change streamed —
+    #: a *planned* drain (``drain_node``) asserts this stays 0: the node
+    #: is live the whole time, so the full old replica set keeps serving
+    stale_reads_during: int = 0
 
     @property
     def moved_fraction(self) -> float:
@@ -171,20 +176,37 @@ class HintedHandoffLog:
     accepted the write in the intended owner's stead (sloppy quorum).  The
     holder's copy serves availability while the owner is out; the drain
     hands the write back and the store prunes the holder's stray copy —
-    per-key hint ownership, Dynamo §4.6."""
+    per-key hint ownership, Dynamo §4.6.
+
+    Every enqueued hint is conserved: it ends exactly one of *replayed*
+    (landed on its owner), *superseded* (a newer version made it moot),
+    *replaced* (a newer hint for the same key took its slot), *discarded*
+    (its owner left the ring for good), or still pending.  The chaos
+    invariant checker asserts that identity after every fault schedule —
+    ``enqueued == replayed + superseded + replaced + discarded + len()``
+    once the world heals — so a sloppy write can never silently vanish.
+    """
 
     def __init__(self) -> None:
         # node -> {key: (value, version, holder-or-None)}
         self._hints: dict[int, dict] = {}
         self.enqueued = 0
         self.replayed = 0
+        self.superseded = 0   # dead on arrival / obsolete by the time of drain
+        self.replaced = 0     # a newer hint for the same (node, key) won
+        self.discarded = 0    # addressee decommissioned, never drains
 
     def add(self, node: int, key, value: bytes, version: int,
             holder: Optional[int] = None) -> None:
         slot = self._hints.setdefault(node, {})
         old = slot.get(key)
-        if old is None or version > old[1]:
+        if old is None:
             slot[key] = (value, version, holder)
+        elif version > old[1]:
+            slot[key] = (value, version, holder)
+            self.replaced += 1
+        else:
+            self.superseded += 1   # incoming hint is already obsolete
         self.enqueued += 1
 
     def get_hint(self, node: int, key) -> Optional[tuple]:
@@ -195,8 +217,40 @@ class HintedHandoffLog:
         return len(self._hints.get(node, ()))
 
     def take(self, node: int) -> dict:
-        """Pop and return every hint addressed to ``node``."""
+        """Pop and return every hint addressed to ``node``.  The caller
+        owns the accounting from here: each taken hint must end up
+        replayed, superseded, or handed back via :meth:`restore`."""
         return self._hints.pop(node, {})
+
+    def restore(self, node: int, key, hint: tuple) -> None:
+        """Re-enqueue a taken hint whose replay could not be delivered
+        (chaos dropped the message, or the hand-back holder was itself
+        unreachable mid-drain).  No double count on ``enqueued`` — the
+        hint is still the same obligation; if a newer hint arrived for
+        the slot while the drain was in flight, the older of the two is
+        accounted superseded."""
+        slot = self._hints.setdefault(node, {})
+        old = slot.get(key)
+        if old is None:
+            slot[key] = hint
+        elif hint[1] > old[1]:
+            slot[key] = hint
+            self.superseded += 1
+        else:
+            self.superseded += 1
+
+    def discard(self, node: int) -> int:
+        """Drop every hint addressed to ``node`` (decommission: the
+        addressee never rejoins, so the hints can never drain)."""
+        dropped = self._hints.pop(node, {})
+        self.discarded += len(dropped)
+        return len(dropped)
+
+    def conserved(self) -> bool:
+        """The conservation identity (see class docstring)."""
+        return self.enqueued == (self.replayed + self.superseded
+                                 + self.replaced + self.discarded
+                                 + len(self))
 
     def __len__(self) -> int:
         return sum(len(v) for v in self._hints.values())
@@ -214,6 +268,9 @@ class _NodeHealth:
     ack_streak: int = 0         # consecutive acks since the last miss
     suspected: bool = False
     probe_tick: int = 0
+    #: Lamport stamp of the last verdict *flip* (suspect or clear) — the
+    #: freshness order verdict gossip merges on; 0 = never flipped
+    stamp: int = 0
 
 
 class FailureDetector:
@@ -261,6 +318,10 @@ class FailureDetector:
         self.timeouts = 0
         self.suspicions = 0        # down verdicts issued
         self.clears = 0            # verdicts revoked by probe acks
+        #: Lamport clock over verdict flips; merged on gossip adoption so
+        #: a coordinator's later flips always outrank what it adopted
+        self.lamport = 0
+        self.adopted = 0           # verdicts taken over from gossip
 
     def _node(self, node: int) -> _NodeHealth:
         h = self._nodes.get(node)
@@ -292,6 +353,8 @@ class FailureDetector:
                 and h.phi <= self.clear_phi):
             h.suspected = False
             h.phi = 0.0
+            self.lamport += 1
+            h.stamp = self.lamport
             self.clears += 1
             return True
         return False
@@ -307,9 +370,48 @@ class FailureDetector:
         h.ack_streak = 0
         if not h.suspected and h.phi >= self.suspect_phi:
             h.suspected = True
+            self.lamport += 1
+            h.stamp = self.lamport
             self.suspicions += 1
             return True
         return False
+
+    # -- verdict gossip (see cluster.VerdictExchange) ----------------------
+    def export_verdicts(self) -> dict[int, tuple[int, bool, float]]:
+        """Every node this detector has ever flipped a verdict on, as
+        ``node -> (stamp, suspected, phi)``.  Nodes with no flip yet carry
+        no record — a coordinator that never saw a node's traffic has
+        nothing to say about it, which is exactly why gossip helps."""
+        return {n: (h.stamp, h.suspected, h.phi)
+                for n, h in sorted(self._nodes.items()) if h.stamp > 0}
+
+    def adopt_verdict(self, node: int, stamp: int, suspected: bool,
+                      phi: float) -> bool:
+        """Take over a gossiped verdict iff it is strictly fresher than
+        this detector's own last flip for the node.  Adoption is a real
+        flip (counted, stamped) when it changes the verdict; either way
+        the local Lamport clock absorbs the remote stamp, so a *later*
+        local observation (e.g. a probe ack from a recovered node) always
+        outranks what was adopted and can propagate back."""
+        h = self._node(node)
+        if stamp <= h.stamp:
+            return False
+        self.lamport = max(self.lamport, stamp)
+        h.stamp = stamp
+        if h.suspected == suspected:
+            return False
+        h.suspected = suspected
+        h.ack_streak = 0
+        if suspected:
+            # trust the remote accrual but keep the clear path honest: the
+            # node must still earn clear_acks probe acks to shed the verdict
+            h.phi = max(float(phi), self.suspect_phi)
+            self.suspicions += 1
+        else:
+            h.phi = 0.0
+            self.clears += 1
+        self.adopted += 1
+        return True
 
     # -- verdicts ----------------------------------------------------------
     def phi(self, node: int) -> float:
@@ -424,15 +526,13 @@ def _stream_ranges(store, moves: dict, now: float,
         for i in range(0, len(keys), STREAM_BATCH):
             batch = keys[i:i + STREAM_BATCH]
             vals, read_done = src_node.background_get(batch, now)
-            nbytes = sum(len(v) for v in vals if v is not None)
-            landed = dst_node.write_channel.issue(
-                read_done, dst_node.latency.put(len(batch), nbytes))
-            for k, v in zip(batch, vals):
-                if v is None:
-                    continue
-                dst_node.data[k] = v
-                dst_node.versions[k] = src_node.versions.get(k, 0)
-            total_bytes += nbytes
+            items = [(k, v, src_node.versions.get(k, 0))
+                     for k, v in zip(batch, vals) if v is not None]
+            # one bulk apply on the destination's write channel, through
+            # the sanctioned chokepoint (membership transfers are
+            # operator-driven and chaos-exempt: src stays None)
+            landed = dst_node.bulk_apply(items, read_done)
+            total_bytes += sum(len(v) for _, v, _ in items)
             done_at = max(done_at, landed)
             if on_batch is not None:
                 on_batch(landed)
@@ -567,6 +667,15 @@ def _cutover(store) -> None:
     prune stale copies, sweep mid-move writes, release the range leases,
     and fire one :class:`MembershipEvent` per change."""
     _rebuild_ring(store)
+    # attached coordinator front-ends (ShardedDKVStore.attach_coordinator)
+    # share the storage nodes but hold their own ring bindings: propagate
+    # the installed ring so every coordinator routes on the same topology
+    for peer in getattr(store, "_coordinators", ()):
+        if peer is not store:
+            peer._points = store._points
+            peer._owners = store._owners
+            peer._replica_cache = store._replica_cache
+            peer.n_shards = store.n_shards
     store._pending_rings.clear()
     for lease in store._held_leases:
         store.leases.release(lease)
@@ -658,11 +767,41 @@ def remove_node(store, shard: int, now: float = 0.0,
         raise
     # pending hints addressed to the leaving node — pre-existing ones and
     # any a mid-move write re-enqueued (it is still in the old ring during
-    # streaming) — will never be drained: discard or they linger forever
-    store.hints.take(shard)
+    # streaming) — will never be drained: discard (counted — the hint
+    # conservation invariant must still balance) or they linger forever
+    store.hints.discard(shard)
     store.down.discard(shard)
     if store.detector is not None:
         store.detector.reset(shard)
+    return report
+
+
+def drain_node(store, shard: int, now: float = 0.0,
+               on_batch: Optional[Callable[[float], None]] = None
+               ) -> MoveReport:
+    """Planned, lease-aware decommission of a **live** node.
+
+    ``remove_node`` tolerates a dead node (survivors stream on its
+    behalf, reads ride out a degraded window); a *drain* is the
+    zero-downtime variant an operator runs before maintenance: it
+    refuses anything but a live, unsuspected node, pre-streams the
+    node's owed ranges under the same :class:`LeaseTable` lease
+    (copy-then-cutover-then-prune — the node itself keeps serving reads
+    for the whole stream), and only then flips ownership.  Because the
+    full old replica set stays live until cutover, **no read is served
+    stale during the flip** — the report carries the coordinator's
+    stale-read delta over the window so callers (and the
+    ``cluster_drain_*`` benchmark section) can assert exactly that."""
+    if shard in store.removed or not 0 <= shard < len(store.shards):
+        raise ValueError(f"node {shard} is not in the ring")
+    if store._failed(shard):
+        raise ValueError(
+            f"planned drain requires node {shard} live and unsuspected; "
+            f"use remove_node to decommission a failed node")
+    stale_before = store.stale_reads
+    report = remove_node(store, shard, now, on_batch)
+    report.kind = "drain"
+    report.stale_reads_during = store.stale_reads - stale_before
     return report
 
 

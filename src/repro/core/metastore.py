@@ -3,15 +3,21 @@
 Bounds metadata memory: when the miner discovers more sequences than the
 capacity, keep the top ones ranked by ``length × support`` (the larger the
 sequence and the higher its support, the better).
+
+The same merge-board idiom carries the cluster's *failure verdicts*
+(:class:`VerdictBoard`): like mined patterns, verdicts are small records
+each coordinator produces locally and everyone benefits from sharing —
+gossiped through ``cluster.VerdictExchange`` exactly the way patterns
+travel through ``cluster.PatternExchange``.
 """
 
 from __future__ import annotations
 
-from typing import Iterable, Sequence
+from typing import Iterable, Mapping, Sequence
 
 from .mining import Pattern
 
-__all__ = ["PatternMetastore"]
+__all__ = ["PatternMetastore", "VerdictBoard"]
 
 
 class PatternMetastore:
@@ -60,3 +66,55 @@ class PatternMetastore:
 
     def __iter__(self):
         return iter(self.patterns)
+
+
+class VerdictBoard:
+    """Latest-wins record board for gossiped failure verdicts.
+
+    One record per storage node: ``(stamp, coord, suspected, phi)`` where
+    ``stamp`` is the publishing detector's Lamport flip stamp and
+    ``coord`` the publishing coordinator's id.  Freshness order is
+    ``(stamp, coord)`` — the coordinator id breaks Lamport ties
+    deterministically — so any set of boards merges to the same fixed
+    point regardless of gossip order or pairing: the convergence property
+    the two-coordinators-disagree partition study relies on.
+    """
+
+    def __init__(self) -> None:
+        # node -> (stamp, coord, suspected, phi)
+        self.records: dict[int, tuple[int, int, bool, float]] = {}
+        self.published = 0
+        self.merges = 0
+
+    def _put(self, node: int, rec: tuple[int, int, bool, float]) -> bool:
+        cur = self.records.get(node)
+        if cur is None or (rec[0], rec[1]) > (cur[0], cur[1]):
+            self.records[node] = rec
+            return True
+        return False
+
+    def publish(self, coord: int,
+                verdicts: Mapping[int, tuple[int, bool, float]]) -> int:
+        """Fold one detector's exported verdicts in under ``coord``'s id."""
+        n = 0
+        for node in sorted(verdicts):
+            stamp, suspected, phi = verdicts[node]
+            n += int(self._put(node, (stamp, int(coord), bool(suspected),
+                                      float(phi))))
+        self.published += n
+        return n
+
+    def merge(self, other: "VerdictBoard") -> int:
+        """Pairwise gossip merge: adopt every fresher record."""
+        n = 0
+        for node in sorted(other.records):
+            n += int(self._put(node, other.records[node]))
+        self.merges += 1
+        return n
+
+    def snapshot(self) -> list[tuple[int, tuple[int, int, bool, float]]]:
+        """Deterministically ordered records for adoption sweeps."""
+        return sorted(self.records.items())
+
+    def __len__(self) -> int:
+        return len(self.records)

@@ -1,0 +1,12 @@
+"""PALP104 positive: direct channel sends bypassing the chaos hook."""
+
+
+def drain(self, node, key, value, version, t):
+    node.data[key] = value
+    node.versions[key] = version
+    node.write_channel.issue(t, node.latency.put(1, len(value)))  # violation
+
+
+def probe(self, node, keys, t):
+    lat = node.latency.get(len(keys), 0)
+    return node.demand.issue(t, lat)          # violation: dodges get_async

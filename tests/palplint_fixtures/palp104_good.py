@@ -1,0 +1,17 @@
+"""PALP104 negative: replica sends through the backstore chokepoints."""
+
+
+def drain(self, node, key, value, version, t):
+    if not node.versions.get(key, 0) >= version:
+        done = node.apply_replica_write(key, value, version, t, src="c0")
+        if done is None:
+            self._note_timeout(node)
+
+
+def stream(self, dst_node, items, t):
+    return dst_node.bulk_apply(items, t)
+
+
+def unrelated_issue(self, tracker, t):
+    # `.issue(...)` on something that is not an RPC lane stays legal
+    return tracker.ticket.issue(t, "maintenance")

@@ -1,0 +1,486 @@
+"""Deterministic chaos engine + partition-tolerant causality.
+
+Covers: seeded fault schedules replaying byte-identically, the invariant
+grid (convergence / causality / hint conservation / quorum safety) over
+seeded schedules, dotted version vector laws and int interop, the
+counter-mode-fails / dotted-mode-survives asymmetry, verdict gossip
+convergence across partitions, sloppy hint hand-back under concurrent
+partitions, coordinator crash-restart state reconstruction, and planned
+zero-downtime drains."""
+
+import pytest
+
+from repro.core import (
+    ChaosEngine,
+    ChaosSchedule,
+    DottedVersion,
+    Fault,
+    LatencyModel,
+    ShardedDKVStore,
+    VerdictExchange,
+    concurrent,
+    descends,
+    merge,
+)
+from tools.chaoscheck import (
+    check_convergence,
+    check_quorum_safety,
+    fingerprint,
+    run_schedule,
+)
+
+pytestmark = pytest.mark.tier1
+
+V = b"x" * 64
+
+
+def flat_latency(i: int) -> LatencyModel:
+    return LatencyModel(jitter_sigma=0.0, stall_frac=0.0, seed=i)
+
+
+def mk_cluster(n=4, replication=2, **kw):
+    kw.setdefault("failure_detection", True)
+    return ShardedDKVStore(
+        n_shards=n, latencies=[flat_latency(i) for i in range(n)],
+        replication=replication, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Dotted version vector laws
+# ---------------------------------------------------------------------------
+
+
+class TestVersions:
+    def test_stamp_chains_causally(self):
+        a = DottedVersion.stamp(0, 1, [])
+        b = DottedVersion.stamp(0, 2, [a])
+        assert b.descends(a) and not a.descends(b)
+        assert not concurrent(a, b)
+
+    def test_disjoint_contexts_are_siblings(self):
+        a = DottedVersion.stamp(0, 1, [])
+        b = DottedVersion.stamp(1, 1, [])
+        assert concurrent(a, b)
+        m = merge([a, b])
+        # LWW by dot: (1, coord 1) beats (1, coord 0); both dots kept
+        assert m.dot == (1, 1)
+        assert m.seen(1, 0) and m.seen(1, 1)
+        assert m.descends(a) and m.descends(b)
+
+    def test_merge_is_order_independent(self):
+        a = DottedVersion.stamp(0, 3, [])
+        b = DottedVersion.stamp(1, 2, [a])
+        c = DottedVersion.stamp(2, 5, [])
+        assert merge([a, b, c]) == merge([c, b, a]) == merge([b, c, a])
+
+    def test_int_interop(self):
+        d = DottedVersion.stamp(0, 1, [])
+        assert descends(d, 0)            # 0 == absent: everything descends
+        assert d > 0 and not (d < 0)
+        assert max([0, d]) is d
+        # legacy positive ints order by sort key, real coords win ties
+        assert d > 1 is False or True    # comparison is defined, no raise
+        assert sorted([3, d, 0]) == [0, d, 3]
+
+    def test_counter_of_recovers_dot_counters(self):
+        a = DottedVersion.stamp(0, 4, [])
+        b = DottedVersion.stamp(1, 2, [a])
+        assert b.counter_of(0) == 4
+        assert b.counter_of(1) == 2
+        assert b.counter_of(7) == 0
+
+    def test_merge_of_ints_stays_int(self):
+        assert merge([1, 3, 2]) == 3
+        assert merge([]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Engine determinism & fault semantics
+# ---------------------------------------------------------------------------
+
+
+class TestEngine:
+    def test_schedule_random_is_deterministic(self):
+        a = ChaosSchedule.random(7, nodes=range(4), coords=("c0", "c1"))
+        b = ChaosSchedule.random(7, nodes=range(4), coords=("c0", "c1"))
+        assert a.faults == b.faults
+
+    def test_on_send_streams_replay_identically(self):
+        sched = ChaosSchedule(seed=3, horizon=1.0, faults=[
+            Fault.link(0.0, 1.0, ("c0",), (1,), drop=0.4, delay=1e-4,
+                       jitter=1e-4, dup=0.3)])
+        e1, e2 = ChaosEngine(sched), ChaosEngine(sched)
+        seq1 = [e1.on_send(0.5, "c0", 1) for _ in range(200)]
+        seq2 = [e2.on_send(0.5, "c0", 1) for _ in range(200)]
+        assert seq1 == seq2
+        assert e1.stats() == e2.stats()
+        assert e1.dropped > 0 and e1.duplicated > 0
+
+    def test_partition_windows_and_symmetry(self):
+        sym = Fault.partition(0.2, 0.4, ("c0", 0), ("c1", 1))
+        asym = Fault.partition(0.2, 0.4, ("c0",), (2,), symmetric=False)
+        eng = ChaosEngine(ChaosSchedule(seed=0, horizon=1.0,
+                                        faults=[sym, asym]))
+        assert eng.partitioned(0.3, "c0", 1)
+        assert eng.partitioned(0.3, 1, "c0")       # symmetric: both ways
+        assert not eng.partitioned(0.5, "c0", 1)   # window closed
+        assert not eng.partitioned(0.1, "c0", 1)   # window not open yet
+        assert eng.partitioned(0.3, "c0", 2)
+        assert not eng.partitioned(0.3, 2, "c0")   # asymmetric: one way
+
+    def test_crash_windows_drive_shards(self):
+        store = mk_cluster()
+        eng = ChaosEngine(ChaosSchedule(seed=0, horizon=1.0, faults=[
+            Fault.crash(0.2, 0.4, node=1)]))
+        store.enable_chaos(eng)
+        eng.advance(0.3, store.shards)
+        assert store.shards[1].crashed
+        eng.advance(0.5, store.shards)
+        assert not store.shards[1].crashed
+
+    def test_skew_adds_delivery_delay(self):
+        eng = ChaosEngine(ChaosSchedule(seed=0, horizon=1.0, faults=[
+            Fault.clock_skew(0.0, 1.0, node=2, skew=5e-4)]))
+        delivered, delay, _ = eng.on_send(0.5, "c0", 2)
+        assert delivered and delay == pytest.approx(5e-4)
+        assert eng.skew_of(0.5, 2) == pytest.approx(5e-4)
+        assert eng.skew_of(0.5, 1) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Replay & the invariant grid
+# ---------------------------------------------------------------------------
+
+
+class TestInvariants:
+    def test_replay_byte_identical(self):
+        a = run_schedule(11, quick=True)
+        b = run_schedule(11, quick=True)
+        assert a["fingerprint"] == b["fingerprint"]
+        assert a["chaos"] == b["chaos"]
+        assert a["unavailable_writes"] == b["unavailable_writes"]
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_invariants_hold_under_seeded_schedules(self, seed):
+        report = run_schedule(seed, quick=True)
+        assert report["errors"] == []
+
+    def test_quorum_safety_strict_mode(self):
+        for seed in (0, 1, 2):
+            assert check_quorum_safety(seed, horizon=0.25, quick=True) == []
+
+    def test_dropped_rpcs_feed_the_detector(self):
+        store = mk_cluster(sloppy_quorum=True, write_mode="quorum")
+        eng = ChaosEngine(ChaosSchedule(seed=5, horizon=1.0, faults=[
+            Fault.link(0.0, 1.0, ("c0",), (1,), drop=1.0)]))
+        store.enable_chaos(eng)
+        before = store.rpc_timeouts
+        for i in range(40):
+            try:
+                store.put(f"k{i}", V, (i + 1) * 1e-3)
+            except KeyError:
+                pass
+        assert store.rpc_timeouts > before
+        assert eng.dropped > 0
+        assert store.detector.suspected(1)
+
+
+# ---------------------------------------------------------------------------
+# Counter mode fails where dotted versions survive
+# ---------------------------------------------------------------------------
+
+
+def _partition_sibling_run(versioning: str) -> ShardedDKVStore:
+    """Two coordinators write the same key on opposite sides of a
+    symmetric partition, then the world heals and reconciles."""
+    store = mk_cluster(n=2, replication=2, write_mode="all",
+                       versioning=versioning, record_acks=True)
+    peer = store.attach_coordinator()
+    eng = ChaosEngine(ChaosSchedule(seed=0, horizon=1.0, faults=[
+        Fault.partition(0.1, 0.5, ("c0", 0), ("c1", 1))]))
+    store.enable_chaos(eng)
+    store.put("k", b"from-c0" + b"." * 57, 0.2)   # lands node0, hints node1
+    peer.put("k", b"from-c1" + b"." * 57, 0.3)    # lands node1, hints node0
+    for t in (0.8, 0.9, 1.0):                     # healed: drains + repair
+        store.reconcile(t)
+        peer.reconcile(t)
+    return store
+
+
+def test_counter_mode_silently_diverges():
+    """The legacy int counter collides across coordinators: both mint
+    version 1, each drain sees 'equal or newer' and skips, read-repair
+    sees 'equal versions' and does nothing — permanent divergence the
+    invariant checker catches."""
+    store = _partition_sibling_run("counter")
+    assert check_convergence(store) != []
+    assert store.shards[0].data["k"] != store.shards[1].data["k"]
+
+
+def test_dotted_versions_converge_the_same_schedule():
+    """Same fault schedule, dotted versioning: the writes come out as
+    siblings, the drains merge them LWW-by-dot, and both replicas end
+    byte-identical with both dots in the surviving causal history."""
+    store = _partition_sibling_run("dotted")
+    assert check_convergence(store) == []
+    v0 = store.shards[0].versions["k"]
+    assert isinstance(v0, DottedVersion)
+    assert v0.seen(1, 0) and v0.seen(1, 1)   # neither write forgotten
+    coords = store._coordinators
+    assert sum(c.sibling_merges for c in coords) > 0
+
+
+# ---------------------------------------------------------------------------
+# Verdict gossip across partitions
+# ---------------------------------------------------------------------------
+
+
+class TestVerdictGossip:
+    def test_gossip_blocked_inside_partition_converges_after(self):
+        store = mk_cluster()
+        peer = store.attach_coordinator()
+        eng = ChaosEngine(ChaosSchedule(seed=0, horizon=1.0, faults=[
+            # c1 alone on the far side: c0 still reaches node 1 (and pays
+            # timeouts for its crash), but gossip cannot cross to c1
+            Fault.partition(0.1, 0.6, ("c0", 0, 1, 2, 3), ("c1",)),
+            Fault.crash(0.1, 2.0, node=1),
+        ]))
+        store.enable_chaos(eng)
+        ex = VerdictExchange()
+        for i in range(30):
+            t = 0.2 + i * 1e-3
+            store._chaos_tick(t)
+            try:
+                store.put(f"k{i}", V, t)
+            except KeyError:
+                pass
+        assert store.detector.suspected(1)
+        assert not peer.detector.suspected(1)    # divergent opinions
+        ex.gossip([store, peer], 0.3)            # mid-partition: blocked
+        assert ex.blocked > 0
+        assert not peer.detector.suspected(1)
+        ex.gossip([store, peer], 0.8)            # healed: verdict travels
+        assert peer.detector.suspected(1)
+        assert ex.adopted > 0
+
+    def test_adoption_is_fresher_wins_only(self):
+        store = mk_cluster()
+        peer = store.attach_coordinator()
+        ex = VerdictExchange()
+        for _ in range(6):
+            store.detector.observe_timeout(1)
+        ex.gossip([store, peer], 0.1)
+        assert peer.detector.suspected(1)
+        # peer later *observes* node 1 recover: its fresher clear verdict
+        # must win the next gossip round, not be clobbered by the stale one
+        for _ in range(peer.detector.clear_acks + 1):
+            peer.detector.observe_ack(1)
+        assert not peer.detector.suspected(1)
+        ex.gossip([store, peer], 0.2)
+        assert not store.detector.suspected(1)
+        assert not peer.detector.suspected(1)
+
+
+# ---------------------------------------------------------------------------
+# Sloppy hint hand-back under concurrent partitions
+# ---------------------------------------------------------------------------
+
+
+class TestHintHandback:
+    def test_holder_partitioned_mid_drain_defers_whole_hint(self):
+        store = mk_cluster(n=4, replication=2, sloppy_quorum=True,
+                           write_mode="quorum")
+        key = "k0"
+        owner = store.replicas_of(key)[0]
+        store.set_down(owner)
+        store.put(key, V, 0.0)                  # sloppy successor holds it
+        hint = store.hints.get_hint(owner, key)
+        assert hint is not None and hint[2] is not None
+        holder = hint[2]
+        # the hand-back's prune side is unreachable mid-drain
+        eng = ChaosEngine(ChaosSchedule(seed=0, horizon=1.0, faults=[
+            Fault.partition(0.0, 0.5, ("c0",), (holder,))]))
+        store.enable_chaos(eng)
+        replayed = store.set_down(owner, False, 0.2)
+        assert replayed == 0                    # deferred, not dropped
+        assert store.hints.pending(owner) == 1  # obligation conserved
+        assert store.hints.conserved()
+        # after the heal the drain completes and the stray copy is pruned
+        assert store._drain_hints(owner, 0.8) == 1
+        assert key in store.shards[owner].data
+        assert key not in store.shards[holder].data
+        assert store.hints.conserved()
+        assert len(store.hints) == 0
+
+    def test_hint_replaced_while_drain_in_flight(self):
+        store = mk_cluster(n=4, replication=2, sloppy_quorum=True)
+        key = "k0"
+        owner = store.replicas_of(key)[0]
+        store.set_down(owner)
+        store.put(key, b"old" + b"." * 61, 0.0)
+        taken = store.hints.take(owner)          # drain in flight
+        store.put(key, b"new" + b"." * 61, 0.1)  # newer hint lands meanwhile
+        store.hints.restore(owner, key, taken[key])
+        # the older taken hint must not clobber the newer one
+        assert store.hints.get_hint(owner, key)[0].startswith(b"new")
+        assert store.hints.conserved()
+        store.set_down(owner, False, 0.5)
+        assert store.shards[owner].data[key].startswith(b"new")
+        assert store.hints.conserved() and len(store.hints) == 0
+
+    def test_two_coordinators_disagree_on_holder_liveness(self):
+        """An asymmetric partition: c0 cannot reach the holder (defers its
+        drain), c1 can (its own hints drain normally) — both ledgers stay
+        conserved and the cluster converges once the cut heals."""
+        store = mk_cluster(n=4, replication=2, sloppy_quorum=True,
+                           write_mode="quorum", record_acks=True)
+        peer = store.attach_coordinator()
+        key = "k0"
+        owner = store.replicas_of(key)[0]
+        store.set_down(owner)
+        store.put(key, V, 0.0)
+        holder = store.hints.get_hint(owner, key)[2]
+        eng = ChaosEngine(ChaosSchedule(seed=0, horizon=1.0, faults=[
+            Fault.partition(0.0, 0.5, ("c0",), (holder,),
+                            symmetric=False)]))
+        store.enable_chaos(eng)
+        assert store.set_down(owner, False, 0.2) == 0   # c0: deferred
+        assert store.hints.pending(owner) == 1
+        store.reconcile(0.8)
+        peer.reconcile(0.8)
+        assert len(store.hints) == 0 and len(peer.hints) == 0
+        assert store.hints.conserved() and peer.hints.conserved()
+        assert check_convergence(store) == []
+
+
+# ---------------------------------------------------------------------------
+# Coordinator restart reconstruction
+# ---------------------------------------------------------------------------
+
+
+class TestRestart:
+    def test_restart_rebuilds_hints_from_stray_copies(self):
+        store = mk_cluster(n=4, replication=2, sloppy_quorum=True,
+                           write_mode="quorum")
+        key = "k0"
+        owner = store.replicas_of(key)[0]
+        store.set_down(owner)
+        store.put(key, V, 0.0)
+        assert store.hints.pending(owner) == 1
+        report = store.restart_coordinator(0.1)   # hint log wiped...
+        assert report["rehinted"] >= 1            # ...and rediscovered
+        assert store.hints.pending(owner) >= 1
+        store.set_down(owner, False, 0.5)
+        assert store.shards[owner].data.get(key) == V
+        holder_copies = [
+            s for s in range(store.n_shards)
+            if s not in store.replicas_of(key)
+            and key in store.shards[s].data]
+        assert holder_copies == []                # hand-back completed
+
+    def test_restart_does_not_resurrect_stale_suspicion(self):
+        store = mk_cluster(n=4, replication=2)
+        store.shards[1].crash()
+        for i in range(30):
+            try:
+                store.put(f"k{i}", V, (i + 1) * 1e-3)
+            except KeyError:
+                pass
+        assert store.detector.suspected(1)
+        store.shards[1].recover()                 # node back, verdict stale
+        store.restart_coordinator(0.1)
+        assert not store.detector.suspected(1)    # rebuilt from live truth
+
+    def test_restart_keeps_dot_counters_monotone(self):
+        store = mk_cluster(n=4, replication=2, versioning="dotted")
+        for i in range(5):
+            store.put("k", V, (i + 1) * 1e-3)
+        v_before = store.shards[store.replicas_of("k")[0]].versions["k"]
+        store.restart_coordinator(0.1)
+        assert store._write_version >= v_before.dot[0]
+        store.put("k", b"post-restart" + b"." * 52, 0.2)
+        v_after = store.shards[store.replicas_of("k")[0]].versions["k"]
+        assert v_after.descends(v_before)         # no dot reuse, no fork
+
+
+# ---------------------------------------------------------------------------
+# Planned drains (zero-downtime decommission)
+# ---------------------------------------------------------------------------
+
+
+class TestDrainNode:
+    def _loaded(self):
+        store = mk_cluster(n=4, replication=2, write_mode="quorum",
+                           read_quorum=2)
+        keys = [f"k{i}" for i in range(120)]
+        for i, k in enumerate(keys):
+            store.put(k, V, (i + 1) * 1e-4)
+        return store, keys
+
+    def test_drain_serves_no_stale_reads(self):
+        store, keys = self._loaded()
+        t0 = store.frontier()
+        reads = {"n": 0}
+
+        def on_batch(t):
+            for k in keys[:: 12]:
+                store.get_async(k, t)
+                reads["n"] += 1
+
+        report = store.drain_node(2, now=t0, on_batch=on_batch)
+        assert report.kind == "drain"
+        assert reads["n"] > 0
+        assert report.stale_reads_during == 0
+        # the drained node is really out and the data survived
+        assert 2 in store.removed
+        for k in keys[:: 7]:
+            assert store.get_async(k, store.frontier()).values[0] == V
+
+    def test_drain_refuses_failed_node(self):
+        store, _keys = self._loaded()
+        store.shards[1].crash()
+        with pytest.raises(ValueError):
+            store.drain_node(1, now=store.frontier())
+        store.shards[1].recover()
+        store.set_down(3)
+        with pytest.raises(ValueError):
+            store.drain_node(3, now=store.frontier())
+
+    def test_drain_refuses_removed_node(self):
+        store, _keys = self._loaded()
+        store.drain_node(2, now=store.frontier())
+        with pytest.raises(ValueError):
+            store.drain_node(2, now=store.frontier())
+
+
+# ---------------------------------------------------------------------------
+# Multi-coordinator plumbing
+# ---------------------------------------------------------------------------
+
+
+class TestAttachCoordinator:
+    def test_ring_changes_propagate_to_peers(self):
+        store = mk_cluster(n=4, replication=2)
+        peer = store.attach_coordinator()
+        assert peer.coord_name == "c1"
+        keys = [f"k{i}" for i in range(60)]
+        for i, k in enumerate(keys):
+            store.put(k, V, (i + 1) * 1e-4)
+        store.add_node(flat_latency(99), now=store.frontier())
+        assert peer.n_shards == store.n_shards == 5
+        for k in keys:
+            assert peer.replicas_of(k) == store.replicas_of(k)
+        # the peer can read and write through the new ring
+        t = store.frontier()
+        assert peer.get_async(keys[0], t).values[0] == V
+        peer.put(keys[0], b"via-peer" + b"." * 56, t + 1e-3)
+
+    def test_peer_writes_are_causally_chained_not_siblings(self):
+        store = mk_cluster(n=2, replication=2, write_mode="all")
+        peer = store.attach_coordinator()
+        store.put("k", V, 1e-3)
+        peer.put("k", b"second" + b"." * 58, 2e-3)  # sees c0's write
+        v = store.shards[0].versions["k"]
+        assert v.dot[1] == 1                         # stamped by c1
+        assert v.seen(1, 0)                          # c0's dot in history
+        assert store.siblings_detected + peer.siblings_detected == 0

@@ -29,7 +29,7 @@ pytestmark = pytest.mark.tier1
 REPO = Path(__file__).resolve().parent.parent
 FIXTURES = REPO / "tests" / "palplint_fixtures"
 ALL_CODES = ["PALP001", "PALP002", "PALP003",
-             "PALP101", "PALP102", "PALP103",
+             "PALP101", "PALP102", "PALP103", "PALP104",
              "PALP201", "PALP202", "PALP203"]
 
 
@@ -65,7 +65,7 @@ def test_positive_counts_and_lines_are_stable():
     """Pin the exact per-fixture hit counts so a rule that silently
     broadens or narrows shows up as a diff here, not just in CI noise."""
     expect = {"PALP001": 6, "PALP002": 6, "PALP003": 6,
-              "PALP101": 3, "PALP102": 2, "PALP103": 2,
+              "PALP101": 3, "PALP102": 2, "PALP103": 2, "PALP104": 2,
               "PALP201": 3, "PALP202": 3, "PALP203": 2}
     for code, n in sorted(expect.items()):
         diags = [d for d in run_rule(code, fixture(f"{code.lower()}_bad.py"))

@@ -1,0 +1,317 @@
+"""Chaos invariant checker: seeded fault schedules, audited after heal.
+
+One ``run_schedule(seed)`` builds a sloppy-quorum cluster with two
+coordinator front-ends, generates a :class:`~repro.core.chaos.
+ChaosSchedule` from the seed, drives a deterministic operation loop on
+the virtual clock through the fault windows (writes alternating between
+coordinators — the sibling factory), heals the world past the schedule
+horizon with :meth:`~repro.core.cluster.ShardedDKVStore.reconcile`, and
+audits four invariants:
+
+* **convergence** — after heal + anti-entropy, every key's live
+  preference replicas are byte-identical (value *and* version), and no
+  non-replica node still holds a stray copy;
+* **causality** — no acked write is lost: for every write the cluster
+  acknowledged, the final version of its key causally descends the acked
+  version (under dotted versioning every sibling's dot survives in the
+  winner's clock; counter mode is expected to fail this on schedules
+  where coordinators raced across a partition — that asymmetry is itself
+  asserted by the tier-1 tests);
+* **hint conservation** — the hinted-handoff ledger balances: every
+  enqueued hint was replayed, superseded, replaced, or discarded, and
+  none is left pending after the heal;
+* **quorum safety** — a separate strict W+R>N sub-run: every read the
+  cluster *answers* returns the latest acked value (unavailability is
+  allowed, staleness is not).
+
+Replay determinism is checked by fingerprinting the healed cluster twice
+from the same seed: the digests must match byte-for-byte.
+
+CLI (the ``chaos-smoke`` CI job)::
+
+    PYTHONPATH=src python -m tools.chaoscheck --seeds 20 [--quick]
+
+prints one line per seed and, on any invariant breach, the failing seed
+(rerun it locally with ``--start <seed> --seeds 1``) and exits 1.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import sys
+from typing import Optional
+
+from repro.core.chaos import ChaosEngine, ChaosSchedule
+from repro.core.cluster import ShardedDKVStore, VerdictExchange
+from repro.core.versions import DottedVersion, descends as _vv_descends
+
+#: deterministic op-loop geometry (virtual seconds).  N_KEYS is odd on
+#: purpose: the workload alternates coordinators per op, so an odd key
+#: count makes every key take writes from *both* coordinators on
+#: successive sweeps — the two-writers-across-a-partition sibling study
+#: (an even count would pin each key to one coordinator forever)
+OP_DT = 1e-3
+N_KEYS = 47
+VALUE = b"v" * 64
+
+
+def _build(versioning: str = "dotted", n_shards: int = 4,
+           strict_read_quorum: bool = False) -> ShardedDKVStore:
+    store = ShardedDKVStore(
+        n_shards=n_shards, replication=2, read_quorum=1,
+        write_mode="quorum", failure_detection=True, sloppy_quorum=True,
+        versioning=versioning, record_acks=True,
+        strict_read_quorum=strict_read_quorum)
+    return store
+
+
+def fingerprint(store: ShardedDKVStore) -> str:
+    """Canonical digest of the cluster's durable state: per shard, every
+    ``(key, value, version repr)`` in sorted order.  Two runs of the same
+    seed must produce identical digests — the replay contract."""
+    h = hashlib.blake2b(digest_size=16)
+    for i, node in enumerate(store.shards):
+        h.update(f"shard{i}".encode())
+        for k in sorted(node.data, key=repr):
+            ver = node.versions.get(k, 0)
+            h.update(f"{k!r}={node.data[k]!r}@{ver!r};".encode())
+    return h.hexdigest()
+
+
+def _workload(store: ShardedDKVStore, peer: ShardedDKVStore,
+              engine: ChaosEngine, horizon: float,
+              quick: bool) -> tuple[list, int, int]:
+    """Drive the deterministic op loop through the fault windows.
+
+    Writers alternate coordinators (the sibling factory: the same key
+    written from both sides of a partition), readers follow two ops
+    behind; unavailability (KeyError) is expected under faults and
+    counted, never fatal.  Gossip runs every 16 ops so verdict boards
+    diverge inside partitions and re-converge after."""
+    exchange = VerdictExchange()
+    coords = [store, peer]
+    n_ops = 400 if quick else 1200
+    unavailable = 0
+    reads_failed = 0
+    now = 0.0
+    for i in range(n_ops):
+        now = (i + 1) * (horizon * 1.2 / n_ops)
+        key = f"k{i % N_KEYS}"
+        c = coords[i % 2]
+        try:
+            c.put(key, VALUE + str(i).encode(), now)
+        except KeyError:
+            unavailable += 1
+        if i % 3 == 2:
+            try:
+                c.get_async(f"k{(i - 2) % N_KEYS}", now)
+            except KeyError:
+                reads_failed += 1
+        if i % 16 == 15:
+            exchange.gossip(coords, now)
+    return coords, unavailable, reads_failed
+
+
+def _heal(store: ShardedDKVStore, peer: ShardedDKVStore,
+          horizon: float) -> float:
+    """Past the schedule horizon every fault window is closed: reconcile
+    repeatedly (hints deferred by an earlier pass drain on the next) from
+    both coordinators until the hint ledgers are empty or stable."""
+    t = horizon * 2.0
+    exchange = VerdictExchange()
+    for round_ in range(6):
+        t += OP_DT
+        store.reconcile(t)
+        peer.reconcile(t)
+        exchange.gossip([store, peer], t)
+        if len(store.hints) == 0 and len(peer.hints) == 0:
+            break
+    return t
+
+
+# -- invariant checkers ------------------------------------------------------
+
+def check_convergence(store: ShardedDKVStore) -> list[str]:
+    """Every live preference replica byte-identical; no stray copies."""
+    errors: list[str] = []
+    keys: set = set()
+    for node in store.shards:
+        keys.update(node.data)
+    for k in sorted(keys, key=repr):
+        pref = store.replicas_of(k)
+        states = {}
+        for s in pref:
+            node = store.shards[s]
+            states[s] = (node.data.get(k), repr(node.versions.get(k, 0)))
+        if len(set(states.values())) > 1:
+            errors.append(f"divergent replicas for {k!r}: {states}")
+        for s, node in enumerate(store.shards):
+            if s not in pref and s not in store.removed and k in node.data:
+                errors.append(f"stray copy of {k!r} on non-replica {s}")
+    return errors
+
+
+def check_causality(store: ShardedDKVStore, *coords: ShardedDKVStore
+                    ) -> list[str]:
+    """No acked write lost: the final version of every acked key descends
+    the acked version (its dot is in the survivor's causal history)."""
+    errors: list[str] = []
+    acked: list[tuple] = []
+    for c in (store, *coords):
+        acked.extend(c.acked_writes)
+    for key, ver, _value in acked:
+        finals = [store.shards[s].versions.get(key, 0)
+                  for s in store.replicas_of(key)
+                  if key in store.shards[s].data]
+        if not finals:
+            errors.append(f"acked write {key!r}@{ver!r} vanished entirely")
+            continue
+        if not any(_vv_descends(f, ver) for f in finals):
+            errors.append(
+                f"acked write {key!r}@{ver!r} lost: finals {finals!r}")
+    return errors
+
+
+def check_hint_conservation(*coords: ShardedDKVStore) -> list[str]:
+    """The hint ledger balances and is empty after heal."""
+    errors: list[str] = []
+    for c in coords:
+        if not c.hints.conserved():
+            h = c.hints
+            errors.append(
+                f"c{c.coord_id} hint ledger leaks: enqueued={h.enqueued} "
+                f"replayed={h.replayed} superseded={h.superseded} "
+                f"replaced={h.replaced} discarded={h.discarded} "
+                f"pending={len(h)}")
+        if len(c.hints):
+            errors.append(
+                f"c{c.coord_id} still holds {len(c.hints)} hints post-heal")
+    return errors
+
+
+def check_quorum_safety(seed: int, horizon: float,
+                        quick: bool) -> list[str]:
+    """Strict W+R>N sub-run: any read the cluster answers is the latest
+    acked value — unavailability (KeyError) is legal, staleness is not."""
+    errors: list[str] = []
+    store = ShardedDKVStore(
+        n_shards=4, replication=3, read_quorum=2, write_mode="quorum",
+        failure_detection=True, strict_read_quorum=True, record_acks=True)
+    engine = ChaosEngine(ChaosSchedule.random(
+        seed, nodes=range(4), coords=("c0",), horizon=horizon))
+    store.enable_chaos(engine)
+    latest: dict = {}        # key -> op index of the latest *acked* write
+    written: dict = {}       # key -> {value: op index} of every attempt
+    n_ops = 200 if quick else 600
+    for i in range(n_ops):
+        now = (i + 1) * (horizon * 1.2 / n_ops)
+        key = f"q{i % 16}"
+        value = b"q" * 32 + str(i).encode()
+        written.setdefault(key, {})[value] = i
+        try:
+            store.put(key, value, now)
+            latest[key] = i
+        except KeyError:
+            # an unacked write may still have partially applied (the
+            # documented partition reality) — reading it later is legal
+            pass
+        rkey = f"q{(i // 2) % 16}"
+        if rkey not in latest:
+            continue
+        try:
+            fut = store.get_async(rkey, now)
+        except KeyError:
+            continue        # refusal is safe; staleness is the breach
+        got_i = written[rkey].get(fut.values[0])
+        if got_i is None or got_i < latest[rkey]:
+            # older than the latest acked write: W+R>N was violated
+            errors.append(
+                f"stale strict-quorum read of {rkey!r} at {now:.4f}: "
+                f"got write #{got_i}, latest acked #{latest[rkey]}")
+    return errors
+
+
+def run_schedule(seed: int, quick: bool = True,
+                 versioning: str = "dotted") -> dict:
+    """One full chaos run: build, fault, heal, audit.  Returns the report
+    dict (``report['errors']`` empty iff every invariant held)."""
+    horizon = 0.25 if quick else 0.6
+    store = _build(versioning)
+    peer = store.attach_coordinator()
+    schedule = ChaosSchedule.random(
+        seed, nodes=range(store.n_shards), coords=("c0", "c1"),
+        horizon=horizon)
+    engine = ChaosEngine(schedule)
+    store.enable_chaos(engine)
+    _coords, unavailable, reads_failed = _workload(
+        store, peer, engine, horizon, quick)
+    _heal(store, peer, horizon)
+    errors = []
+    errors += check_convergence(store)
+    errors += check_causality(store, peer)
+    errors += check_hint_conservation(store, peer)
+    errors += check_quorum_safety(seed, horizon, quick)
+    return {
+        "seed": seed,
+        "versioning": versioning,
+        "fingerprint": fingerprint(store),
+        "errors": errors,
+        "unavailable_writes": unavailable,
+        "unavailable_reads": reads_failed,
+        "siblings_detected": store.siblings_detected
+        + peer.siblings_detected,
+        "sibling_merges": store.sibling_merges + peer.sibling_merges,
+        "chaos": engine.stats(),
+    }
+
+
+def check_replay(seed: int, quick: bool = True) -> bool:
+    """The replay contract: two runs of one seed, identical fingerprints."""
+    a = run_schedule(seed, quick)
+    b = run_schedule(seed, quick)
+    return a["fingerprint"] == b["fingerprint"]
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seeds", type=int, default=20,
+                    help="number of consecutive seeds to audit")
+    ap.add_argument("--start", type=int, default=0,
+                    help="first seed (rerun a failing seed via "
+                         "--start <seed> --seeds 1)")
+    ap.add_argument("--quick", action="store_true",
+                    help="short horizon / fewer ops per schedule")
+    ap.add_argument("--replay-every", type=int, default=5,
+                    help="check byte-identical replay on every Nth seed "
+                         "(0 disables)")
+    args = ap.parse_args(argv)
+    failed = 0
+    for seed in range(args.start, args.start + args.seeds):
+        report = run_schedule(seed, quick=args.quick)
+        status = "ok" if not report["errors"] else "FAIL"
+        print(f"seed {seed:4d}  {status}  fp={report['fingerprint']}  "
+              f"siblings={report['siblings_detected']}"
+              f"/{report['sibling_merges']}  "
+              f"chaos={report['chaos']}")
+        for e in report["errors"]:
+            print(f"    {e}")
+        if report["errors"]:
+            failed += 1
+            print(f"REPRODUCE: PYTHONPATH=src python -m tools.chaoscheck "
+                  f"--start {seed} --seeds 1"
+                  f"{' --quick' if args.quick else ''}")
+        if args.replay_every and (seed - args.start) % args.replay_every == 0:
+            if not check_replay(seed, quick=args.quick):
+                failed += 1
+                print(f"seed {seed:4d}  REPLAY MISMATCH (determinism "
+                      f"breach)")
+    if failed:
+        print(f"{failed} of {args.seeds} schedules breached an invariant")
+        return 1
+    print(f"all {args.seeds} schedules held every invariant")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

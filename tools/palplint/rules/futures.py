@@ -1,14 +1,17 @@
 """Futures/RPC-discipline family: PALP101 abandoned RPCFuture,
 PALP102 unbounded coordinator wait loop, PALP103 unguarded replica
-mutation.
+mutation, PALP104 chaos-bypassing direct channel send.
 
 Scope: the cluster layer — ``backstore.py``, ``cluster.py``,
 ``membership.py`` under ``src/repro/core/``.  These encode the
 protocols PR 5's ``LRUSpace.put`` coherence bug slipped past: a future
 issued but never consumed silently drops a read, a retry loop without
 an ``rpc_timeout`` bound can spin a coordinator forever under churn,
-and a replica-store write without a version comparison can resurrect
-stale data during read-repair or hint drains.
+a replica-store write without a version comparison can resurrect
+stale data during read-repair or hint drains, and a coordinator-layer
+``channel.issue`` that skips the ``backstore`` RPC chokepoints is
+invisible to the chaos engine — the fault schedule silently stops
+covering that path.
 """
 
 from __future__ import annotations
@@ -173,4 +176,50 @@ register(Rule(
              "staleness guard)"),
     scope=_mutation_scope,
     check=_check_unguarded_mutation,
+))
+
+
+# ---------------------------------------------------------------- PALP104
+
+#: the simulated node's RPC lanes; sends must route through the
+#: backstore chokepoints (get_async / multi_get_async / put /
+#: apply_replica_write / bulk_apply), which consult the chaos engine
+_CHANNEL_ATTRS = {"write_channel", "demand", "background"}
+
+
+def _chokepoint_scope(path: str) -> bool:
+    # backstore.py IS the chokepoint layer — its own issue() calls are
+    # the sanctioned sends; everyone above it must not reach around
+    return path in _CLUSTER_FILES[1:]
+
+
+def _check_direct_channel_send(ctx: FileContext) -> list[Diagnostic]:
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "issue"):
+            continue
+        chan = node.func.value
+        if isinstance(chan, ast.Attribute) and chan.attr in _CHANNEL_ATTRS:
+            out.append(Diagnostic(
+                ctx.path, node.lineno, node.col_offset + 1, "PALP104",
+                f"direct `.{chan.attr}.issue(...)` bypasses the backstore "
+                "RPC chokepoints (get_async/put/apply_replica_write/"
+                "bulk_apply) — the chaos engine cannot drop, delay, or "
+                "partition this send, so fault schedules silently stop "
+                "covering it"))
+    return out
+
+
+register(Rule(
+    code="PALP104",
+    name="chaos-bypassing-send",
+    family="futures",
+    summary=("coordinator/membership code never calls "
+             "`*.write_channel/demand/background.issue(...)` directly; "
+             "all replica sends go through the chaos-adjudicated "
+             "backstore chokepoints"),
+    scope=_chokepoint_scope,
+    check=_check_direct_channel_send,
 ))
