@@ -47,6 +47,16 @@ byte-identical-replay flag for seed 0.
   cluster_chaos_{converged,causal,hint_conserved,quorum_safe,
                  replay_identical} — invariant flags over the seed grid
 
+Every palpatine stage-2 run additionally pools its per-pattern prefetch
+attribution (repro.core.obs) into the ``attr_*`` gate keys — prefetched
+and hit counts, waste ratio, hit byte-mass by pattern-length decile, and
+the top-pattern table — and the largest static configuration runs under
+a seeded 1-in-8 sampled palpascope tracer dumped to ``TRACE_cluster.json``
+(the CI trace artifact, rendered by ``tools.palpascope``).
+
+  cluster_attr  — pooled attribution roll-ups
+  cluster_trace — sampled-trace capture stats + dump path
+
 CLI::
 
     python -m benchmarks.bench_cluster --quick \
@@ -66,9 +76,14 @@ import numpy as np
 from repro.core import ClusterBaseline, ClusterClient, ClusterConfig
 from repro.core import HeuristicConfig, LatencyModel, MiningParams
 from repro.core import PalpatineConfig, ShardedDKVStore
+from repro.core.obs import AttributionTable, Tracer, percentile
 
 from .common import bench_cli, latency_stats, row, sum_gate
 from .workloads import TPCC, TPCCConfig
+
+#: sampled palpascope trace of the largest static-sweep configuration —
+#: uploaded as a CI artifact and rendered by ``tools.palpascope``
+TRACE_PATH = "TRACE_cluster.json"
 
 
 def tenant_streams(gen: TPCC, n_clients: int, n_tx: int, seed: int):
@@ -93,7 +108,9 @@ def palpatine_config(cache_bytes: int = 1 << 20) -> PalpatineConfig:
 
 
 def _p99_us(lats) -> float:
-    return float(np.percentile(np.asarray(lats), 99) * 1e6)
+    # the one canonical (nearest-rank) definition, shared with
+    # bench_overhead and the obs histograms — see obs.percentile
+    return percentile(lats, 99.0) * 1e6
 
 
 def static_sweep(quick: bool = True, results: dict | None = None) -> dict:
@@ -102,6 +119,11 @@ def static_sweep(quick: bool = True, results: dict | None = None) -> dict:
     client_counts = (2,) if quick else (2, 4, 8, 16)
     n_tx = 60 if quick else 250           # per tenant, per stage
     gen = TPCC(TPCCConfig())
+    # per-pattern prefetch attribution pooled over every palpatine run
+    # (exported as the attr_* perf-gate keys), and a seeded sampled
+    # tracer on the largest configuration (dumped to TRACE_PATH)
+    attr = AttributionTable()
+    tracer = None
 
     for n_shards in shard_counts:
         for n_clients in client_counts:
@@ -123,7 +145,12 @@ def static_sweep(quick: bool = True, results: dict | None = None) -> dict:
             cluster.mine_all()
             cluster.exchange_patterns()
             cluster.reset_stats()
+            if (n_shards, n_clients) == (shard_counts[-1],
+                                         client_counts[-1]):
+                tracer = Tracer(sample=1.0 / 8, seed=0)
+                cluster.enable_tracing(tracer)
             lats = [l for ls in cluster.run(stage2) for l in ls]
+            attr.merge(cluster.aggregate_attribution())
             ls_ = latency_stats(lats)
             agg = cluster.aggregate_stats()
             per_shard = {
@@ -139,6 +166,23 @@ def static_sweep(quick: bool = True, results: dict | None = None) -> dict:
                 speedup=bls["mean_us"] / ls_["mean_us"],
                 patterns=len(cluster.exchange.store),
                 col_patterns=len(cluster.exchange.col_store), **per_shard)
+
+    # attribution roll-ups into the perf gate (per-pattern table rides
+    # along in the JSON for tools/palpascope.py `attr`)
+    results["attr_prefetched"] = float(attr.total_prefetched)
+    results["attr_hits"] = float(attr.total_hits)
+    results["attr_waste_ratio"] = attr.waste_ratio
+    for i, mass in enumerate(attr.hit_mass_by_length_decile()):
+        results[f"attr_hit_mass_decile_{i}"] = mass
+    results["attr_top_patterns"] = attr.top_rows(5)
+    row("cluster_attr", float(attr.total_hits),
+        prefetched=attr.total_prefetched, hits=attr.total_hits,
+        waste_ratio=attr.waste_ratio, patterns=len(attr.rows))
+    if tracer is not None:
+        tracer.dump(TRACE_PATH)
+        row("cluster_trace", float(tracer.roots_kept),
+            roots_seen=tracer.roots_seen, roots_kept=tracer.roots_kept,
+            open_spans=tracer.open_spans, path=TRACE_PATH)
     return results
 
 
@@ -450,6 +494,17 @@ def check(results: dict, committed: dict, max_regression: float) -> list[str]:
             failures.append(f"{key}: {new:.3f} < committed {old:.3f} "
                             f"/ {max_regression}")
         if key == "elastic_moved_fraction" and new > old * max_regression:
+            failures.append(f"{key}: {new:.3f} > committed {old:.3f} "
+                            f"× {max_regression}")
+        # attribution mass is workload-determined (the sim is seeded):
+        # a collapse means prefetches stopped landing or stopped being
+        # attributed; waste growing means admission quality regressed
+        if key in ("attr_hits", "attr_prefetched") and old >= 10 \
+                and new < old / max_regression:
+            failures.append(f"{key}: {new:.0f} < committed {old:.0f} "
+                            f"/ {max_regression}")
+        if key == "attr_waste_ratio" and old >= 0.05 \
+                and new > old * max_regression:
             failures.append(f"{key}: {new:.3f} > committed {old:.3f} "
                             f"× {max_regression}")
     return failures

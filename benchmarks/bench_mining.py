@@ -5,7 +5,9 @@ minimum-support values, on SEQB and TPC-C traces.  ``vmsp-dfs`` rows time
 the legacy per-node DFS walker against the frontier engine that replaced it
 (``speedup_*`` keys record the ratio), ``bitmap-build`` rows micro-bench the
 ``VerticalBitmaps`` scatter/pack, and the kernel-accelerated VMSP path is
-also timed in full mode.
+also timed in full mode.  The ``attribution_sweep`` closes the loop with
+an observe → mine → attributed-replay pass exporting ``attr_mining_*``
+keys (per-pattern hit/waste mass, hit byte-mass by length decile).
 
 CLI::
 
@@ -24,7 +26,10 @@ import tracemalloc
 
 import numpy as np
 
-from repro.core import ALGORITHMS, MiningParams, SequenceDatabase
+from repro.core import (
+    ALGORITHMS, HeuristicConfig, MiningParams, PalpatineClient,
+    PalpatineConfig, SequenceDatabase,
+)
 from repro.core.mining import VerticalBitmaps, _dfs_mine, maximal_filter
 
 from .common import bench_cli, row, sum_gate, wall_clock
@@ -63,6 +68,49 @@ def _timed(fn, *args, repeats: int = 1):
         out = fn(*args)
         best = min(best, (wall_clock() - t0) * 1e3)
     return out, best
+
+
+def attribution_sweep(quick: bool = True,
+                      results: dict | None = None) -> dict:
+    """Close the mining loop (MITHRIL's question): which mined patterns
+    *earn* their prefetches?  One SEQB observe → mine → replay pass with
+    per-pattern attribution on, exporting the hit/waste roll-ups and the
+    hit byte-mass by pattern-length decile as ``attr_mining_*`` keys —
+    the signal the ROADMAP's admission/mining tentpoles consume."""
+    results = {} if results is None else results
+    n_sessions = 300 if quick else 1_000
+    seqb = SEQB(SEQBConfig(zipf_exp=1.0, n_sessions=n_sessions,
+                           n_blocks=30_000))
+    store = seqb.make_store()
+    stream = [list(s) for s in seqb.sessions(np.random.default_rng(9))]
+    pal = PalpatineClient(store, PalpatineConfig(
+        heuristic=HeuristicConfig("fetch_progressive"),
+        # small enough that the zipf head does not just stay demand-
+        # cached (a 1MB cache holds it whole and zero prefetches issue);
+        # attribution needs prefetches to attribute
+        cache_bytes=1 << 14,
+        mining=MiningParams(minsup=0.02, min_len=3, max_len=15, maxgap=1)))
+    for sess in stream[: n_sessions // 2]:       # observe
+        for key in sess:
+            pal.read(key)
+        pal.logger.flush_session()
+    pal.mine_now()
+    for sess in stream[n_sessions // 2:]:        # attributed replay
+        for key in sess:
+            pal.read(key)
+        pal.logger.flush_session()
+    attr = pal.cache.attr
+    results["attr_mining_prefetched"] = float(attr.total_prefetched)
+    results["attr_mining_hits"] = float(attr.total_hits)
+    results["attr_mining_waste_ratio"] = attr.waste_ratio
+    deciles = attr.hit_mass_by_length_decile()
+    for i, mass in enumerate(deciles):
+        results[f"attr_mining_hit_mass_decile_{i}"] = mass
+    row("mining_attribution", float(attr.total_hits),
+        prefetched=attr.total_prefetched, hits=attr.total_hits,
+        waste_ratio=attr.waste_ratio, patterns=len(attr.rows),
+        top_decile=max(range(10), key=lambda i: deciles[i]))
+    return results
 
 
 def main(quick: bool = True, results: dict | None = None) -> dict:
@@ -117,6 +165,7 @@ def main(quick: bool = True, results: dict | None = None) -> dict:
                 name = f"mining_{workload}_vmsp-kernel_minsup{minsup}"
                 results[name] = dt_ms
                 row(name, dt_ms * 1e3, n_sequences=len(pats), time_ms=dt_ms)
+    attribution_sweep(quick, results)
     return results
 
 
@@ -152,6 +201,14 @@ def check(results: dict, committed: dict, max_regression: float) -> list[str]:
     failures.extend(sum_gate(results, committed,
                              lambda k: k.startswith("mining_"),
                              max_regression, "mining time ms"))
+    # attribution mass is workload-determined (seeded sim): a collapse
+    # means mined patterns stopped earning prefetch hits
+    for key in ("attr_mining_hits", "attr_mining_prefetched"):
+        old, new = committed.get(key), results.get(key)
+        if isinstance(old, (int, float)) and isinstance(new, (int, float)) \
+                and old >= 10 and new < old / max_regression:
+            failures.append(f"{key}: {new:.0f} < committed {old:.0f} "
+                            f"/ {max_regression}")
     return failures
 
 

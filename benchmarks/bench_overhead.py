@@ -1,6 +1,6 @@
 """Paper Fig 18 + ROADMAP item 2: client-side overhead.
 
-Two sweeps:
+Three sweeps:
 
 * ``overhead_client_*`` — the paper's Fig 18 experiment: PALPATINE's full
   work flow (interception, logging, tree matching, prefetch bookkeeping)
@@ -12,6 +12,10 @@ Two sweeps:
   and advancing every op.  This is the hot path ROADMAP open item 2
   tracks: scalar cost grows linearly with live contexts, the batched
   walk stays ~flat.  ``overhead_speedup_ctx{N}`` records the ratio.
+* ``overhead_tracing`` / ``tracing_overhead_ratio`` — the palpascope
+  contract: the whole-client pass with the default NULL_TRACER vs full
+  (sample=1.0) span capture at 64 live decision contexts, gated at
+  <= 1.15 (tracing off must stay free; tracing on must stay cheap).
 
 CLI::
 
@@ -33,13 +37,18 @@ import numpy as np
 
 from repro.core import (
     BaselineClient, HeuristicConfig, MiningParams, PalpatineClient,
-    PalpatineConfig, Pattern, PTreeIndex, build_engine,
+    PalpatineConfig, Pattern, PTreeIndex, SimulatedDKVStore, build_engine,
 )
+from repro.core.obs import NULL_TRACER, Tracer
 
 from .common import bench_cli, row, sum_gate, wall_clock
 from .workloads import SEQB, SEQBConfig
 
 SPEEDUP_FLOOR_CTX64 = 5.0
+#: full palpascope tracing may cost at most 15% of client throughput —
+#: the ceiling the perf gate enforces on ``tracing_overhead_ratio``
+#: (NULL_TRACER is the default and must stay effectively free)
+TRACING_OVERHEAD_CEILING = 1.15
 
 
 def _median_wall(fn, reps):
@@ -170,10 +179,70 @@ def bench_client(results: dict, quick: bool) -> None:
                 overhead_pct_of_op=100.0 * over_us / op_us)
 
 
+# ---------------------------------------------------------------------------
+# palpascope tracing overhead (the NULL_TRACER contract)
+# ---------------------------------------------------------------------------
+
+
+def bench_tracing(results: dict, quick: bool) -> None:
+    """Ops/sec with the default NULL_TRACER vs full (sample=1.0) span
+    capture, on the whole-client hot path (cache lookup, decision walk,
+    prefetch emission, demand fetch) with the chain forest holding the
+    64-live-context working point the decision sweep gates.
+    ``tracing_overhead_ratio`` = traced wall / untraced wall; the perf
+    gate enforces <= TRACING_OVERHEAD_CEILING, fresh-run measured, not
+    grandfathered."""
+    window = 64
+    tail = 128 if quick else 512
+    reps = 3 if quick else 5
+    fanout = 4
+    length = window + tail
+    index = chain_forest(window, length, fanout)
+    stream = list(range(length))
+    # chain_forest id space: chain items 0..length-1, then one decoy id
+    # per (chain, depth, fan) triple — every id must exist in the store
+    # so prefetch emission pays its real (simulated) cost
+    n_ids = length + (length - window) * window * fanout
+    store = SimulatedDKVStore()
+    store.load((i, b"v" * 64) for i in range(n_ids))
+    pal = PalpatineClient(store, PalpatineConfig(
+        heuristic=HeuristicConfig("fetch_progressive",
+                                  progressive_depth=3),
+        cache_bytes=1 << 20,
+        # never shed: the ratio measures the per-op hot path (decision
+        # walk + prefetch emission), not the backlog governor
+        backlog_cap=float("inf"),
+        mining=MiningParams(minsup=0.02, min_len=3, max_len=15, maxgap=1)))
+    # the client's item-id vocabulary must cover every prefetch target
+    # (chain items and decoys) before the engine can emit them
+    for i in range(n_ids):
+        pal.logger.db.item_id(i)
+    pal.engine = build_engine(index, pal.cfg.heuristic, max_contexts=64)
+    pal.engine.attribute = True
+
+    def one_pass():
+        pal.engine.replace_index(index)   # reset contexts, same arrays
+        for item in stream:
+            pal.read(item)
+
+    pal.tracer = NULL_TRACER
+    null_wall = _median_wall(one_pass, reps)
+    pal.tracer = Tracer(sample=1.0, seed=0, capacity=256)
+    traced_wall = _median_wall(one_pass, reps)
+    ratio = traced_wall / max(null_wall, 1e-9)
+    results["tracing_overhead_ratio"] = ratio
+    row("overhead_tracing", ratio, ratio=ratio,
+        null_wall_s=null_wall, traced_wall_s=traced_wall,
+        null_ops_per_s=len(stream) / max(null_wall, 1e-9),
+        traced_ops_per_s=len(stream) / max(traced_wall, 1e-9),
+        open_spans=pal.tracer.open_spans)
+
+
 def main(quick: bool = True) -> dict:
     results: dict = {}
     bench_decision(results, quick)
     bench_client(results, quick)
+    bench_tracing(results, quick)
     return results
 
 
@@ -194,6 +263,13 @@ def check(results: dict, committed: dict, max_regression: float) -> list[str]:
             f"overhead_speedup_ctx64 = {speedup} < floor "
             f"{SPEEDUP_FLOOR_CTX64} (vectorized engine must stay >=5x "
             f"cheaper than the scalar oracle at 64 live contexts)")
+    ratio = results.get("tracing_overhead_ratio")
+    if not isinstance(ratio, (int, float)) or \
+            ratio > TRACING_OVERHEAD_CEILING:
+        failures.append(
+            f"tracing_overhead_ratio = {ratio} > ceiling "
+            f"{TRACING_OVERHEAD_CEILING} (full palpascope span capture "
+            f"must cost <= 15% of client throughput at 64 live contexts)")
     return failures
 
 

@@ -31,6 +31,20 @@ from .membership import (
     RangeLease,
 )
 from .metastore import PatternMetastore, VerdictBoard
+from .obs import (
+    NULL_TRACER,
+    AttributionTable,
+    Histogram,
+    MetricsRegistry,
+    NullTracer,
+    PrefetchCause,
+    Span,
+    Tracer,
+    critical_path,
+    latency_percentiles,
+    percentile,
+    span_kind_breakdown,
+)
 from .versions import DottedVersion, concurrent, descends, merge
 from .mining import (
     ALGORITHMS,
@@ -47,8 +61,13 @@ from .ptree import FlatForest, PTree, PTreeIndex
 from .sessions import AccessLogger, Container, SequenceDatabase
 
 __all__ = [
-    "AccessLogger", "ALGORITHMS", "BITMAP_ALGOS", "BaselineClient",
+    "AccessLogger", "ALGORITHMS", "AttributionTable", "BITMAP_ALGOS",
+    "BaselineClient",
     "BudgetRebalancer",
+    "Histogram", "MetricsRegistry", "NULL_TRACER", "NullTracer",
+    "PrefetchCause", "Span", "Tracer",
+    "critical_path", "latency_percentiles", "percentile",
+    "span_kind_breakdown",
     "CacheStats", "Channel", "ChaosEngine", "ChaosSchedule",
     "Clock", "DottedVersion", "FailureDetector", "Fault", "FlatForest",
     "HintedHandoffLog",

@@ -30,6 +30,8 @@ from typing import Any, Callable, Iterable, Optional, Sequence
 
 import numpy as np
 
+from .obs import NULL_TRACER, SPAN_RPC, SPAN_SERVICE
+
 __all__ = ["Clock", "LatencyModel", "Channel", "RPCFuture",
            "SimulatedDKVStore"]
 
@@ -208,6 +210,11 @@ class SimulatedDKVStore:
         #: PALP104 flags direct ``Channel.issue`` sends that bypass them).
         self.chaos = None
         self.node_id: Optional[int] = None
+        #: Palpascope hook: RPC entry points open child spans on this
+        #: tracer.  NULL_TRACER's methods are constant no-ops, so an
+        #: untraced store pays a few method calls per RPC and nothing
+        #: else (gated by bench_overhead's tracing_overhead_ratio).
+        self.tracer = NULL_TRACER
 
     # channel aliases (pre-futures API surface, kept for tests/tools)
     @property
@@ -288,25 +295,59 @@ class SimulatedDKVStore:
         self._note_service(lat, len(keys))
         return vals, lat
 
+    def _trace_rpc(self, sp, now: float, entry: float, done: float,
+                   src, dups: int, n_keys: int) -> None:
+        """Annotate a delivered demand RPC: chaos link delay/duplication
+        as fields, the node-side interval as a ``service`` child (the
+        span a chaos-dropped RPC conspicuously lacks)."""
+        tr = self.tracer
+        sp.set(node=self.node_id, src=src, n_keys=n_keys)
+        if entry > now:
+            sp.set(link_delay=entry - now)
+        if dups:
+            sp.set(duplicates=dups)
+        ssp = tr.span(SPAN_SERVICE, entry)
+        tr.end(ssp, done)
+        sp.finish(done)
+
     def get_async(self, key, now: float, src=None) -> RPCFuture:
         """Issue a demand read on the node's RPC pipeline; never blocks.
         The future's ``done_at`` accounts queueing behind other in-flight
         demand reads (handler-pool contention)."""
+        tr = self.tracer
+        sp = tr.span(SPAN_RPC, now)
         ok, entry, dups = self._chaos_send(now, src)
         if not ok:
+            if sp.live:
+                sp.mark("dropped").set(node=self.node_id, src=src,
+                                       reason=getattr(self.chaos,
+                                                      "last_drop_reason",
+                                                      None))
+            tr.end(sp, now)
             return RPCFuture((key,), [None], now, now, done_each=[now],
                              timed_out=True, dropped=True)
         v, lat = self.get(key)
         done = self.demand.issue(entry, lat)
         for _ in range(dups):  # duplicate delivery: wasted handler service
             self.demand.issue(entry, lat)
+        if sp.live:
+            self._trace_rpc(sp, now, entry, done, src, dups, 1)
+        tr.end(sp)
         return RPCFuture((key,), [v], now, done, done_each=[done])
 
     def multi_get_async(self, keys: Sequence, now: float,
                         src=None) -> RPCFuture:
         """Batched demand read as one pipelined RPC."""
+        tr = self.tracer
+        sp = tr.span(SPAN_RPC, now)
         ok, entry, dups = self._chaos_send(now, src)
         if not ok:
+            if sp.live:
+                sp.mark("dropped").set(node=self.node_id, src=src,
+                                       reason=getattr(self.chaos,
+                                                      "last_drop_reason",
+                                                      None))
+            tr.end(sp, now)
             return RPCFuture(tuple(keys), [None] * len(keys), now, now,
                              done_each=[now] * len(keys),
                              timed_out=True, dropped=True)
@@ -314,6 +355,9 @@ class SimulatedDKVStore:
         done = self.demand.issue(entry, lat)
         for _ in range(dups):
             self.demand.issue(entry, lat)
+        if sp.live:
+            self._trace_rpc(sp, now, entry, done, src, dups, len(keys))
+        tr.end(sp)
         return RPCFuture(tuple(keys), vals, now, done,
                          done_each=[done] * len(keys))
 
@@ -346,11 +390,25 @@ class SimulatedDKVStore:
         drop sheds the whole batch and returns ``(None, now)`` — distinct
         from a backlog-cap shed's ``[None, ...]`` values so the caller can
         feed the missed ack to its failure detector."""
+        tr = self.tracer
+        sp = tr.span(SPAN_RPC, now)
         ok, entry, _ = self._chaos_send(now, src)
         if not ok:
+            if sp.live:
+                sp.mark("dropped").set(node=self.node_id, src=src,
+                                       background=True)
+            tr.end(sp, now)
             return None, now
         vals, lat = self._serve(keys)
-        return vals, self.background.issue(entry, lat)
+        done = self.background.issue(entry, lat)
+        if sp.live:
+            # background work: the span closes at issue time (it must
+            # nest in the foreground op that caused it); the batch's
+            # landing time rides along as a field
+            sp.set(node=self.node_id, src=src, n_keys=len(keys),
+                   background=True, done_at=done)
+        tr.end(sp, entry)
+        return vals, done
 
     def background_multi_get(
         self, keys: Sequence, now: float, backlog_cap: Optional[float] = None
@@ -371,14 +429,25 @@ class SimulatedDKVStore:
         the caller does not block.  Returns ``None`` when the chaos engine
         dropped the message — the write never reached this node, the
         coordinator sees a missed ack and must hint/retry."""
+        tr = self.tracer
+        sp = tr.span(SPAN_RPC, now)
         ok, entry, dups = self._chaos_send(now, src)
         if not ok:
+            if sp.live:
+                sp.mark("dropped").set(node=self.node_id, src=src,
+                                       write=True)
+            tr.end(sp, now)
             return None
         self.data[key] = value
         lat = self.latency.put(1, len(value))
         done = self.write_channel.issue(entry, lat)
         for _ in range(dups):  # duplicate delivery: idempotent re-apply
             self.write_channel.issue(entry, lat)
+        if sp.live:
+            sp.set(node=self.node_id, src=src, write=True, done_at=done)
+            if dups:
+                sp.set(duplicates=dups)
+        tr.end(sp, entry)
         for w in self._watchers:
             w(key)
         return done
@@ -391,8 +460,14 @@ class SimulatedDKVStore:
         coordinator-to-replica transfer (PALP104 flags the direct-channel
         sends this replaces).  Returns the completion time, or ``None``
         when chaos dropped the message (nothing applied)."""
+        tr = self.tracer
+        sp = tr.span(SPAN_RPC, now)
         ok, entry, dups = self._chaos_send(now, src)
         if not ok:
+            if sp.live:
+                sp.mark("dropped").set(node=self.node_id, src=src,
+                                       replica_write=True)
+            tr.end(sp, now)
             return None
         self.data[key] = value
         self.versions[key] = version
@@ -400,6 +475,10 @@ class SimulatedDKVStore:
         done = self.write_channel.issue(entry, lat)
         for _ in range(dups):
             self.write_channel.issue(entry, lat)
+        if sp.live:
+            sp.set(node=self.node_id, src=src, replica_write=True,
+                   done_at=done)
+        tr.end(sp, entry)
         # deliberately no watcher fire: repair/drain installs the value
         # clients already observed at write time — no invalidation storm
         return done

@@ -14,6 +14,8 @@ import dataclasses
 from collections import OrderedDict
 from typing import Any, Optional
 
+from .obs import AttributionTable
+
 __all__ = ["CacheStats", "LRUSpace", "TwoSpaceCache"]
 
 
@@ -42,15 +44,19 @@ class _Entry:
     value: Any
     size: int
     available_at: float = 0.0    # prefetch completion time (virtual clock)
+    cause: Any = None            # PrefetchCause for attribution (or None)
 
 
 class LRUSpace:
-    """Byte-capacity LRU."""
+    """Byte-capacity LRU.  ``evict_cb``, when set, observes every
+    capacity eviction as ``(key, entry)`` — the attribution hook for
+    prefetched-but-never-touched entries leaving the preemptive space."""
 
     def __init__(self, capacity_bytes: int):
         self.capacity = int(capacity_bytes)
         self.used = 0
         self.od: "OrderedDict[Any, _Entry]" = OrderedDict()
+        self.evict_cb = None
 
     def __contains__(self, key) -> bool:
         return key in self.od
@@ -84,6 +90,8 @@ class LRUSpace:
             k, e = self.od.popitem(last=False)
             self.used -= e.size
             evicted.append(k)
+            if self.evict_cb is not None:
+                self.evict_cb(k, e)
         return evicted
 
     def remove(self, key) -> bool:
@@ -103,6 +111,8 @@ class LRUSpace:
             k, e = self.od.popitem(last=False)
             self.used -= e.size
             evicted.append(k)
+            if self.evict_cb is not None:
+                self.evict_cb(k, e)
         return evicted
 
 
@@ -112,6 +122,17 @@ class TwoSpaceCache:
         self.main = LRUSpace(main_bytes)
         self.preemptive = LRUSpace(int(main_bytes * preemptive_frac))
         self.stats = CacheStats()
+        # per-pattern prefetch attribution (Palpascope): every admitted
+        # prefetch ends up hit, unused, or resident — the table's hit
+        # sum equals stats.prefetch_hits exactly (tier-1 pinned)
+        self.attr = AttributionTable()
+        self.preemptive.evict_cb = self._prefetch_evicted
+
+    def _prefetch_evicted(self, key, e: _Entry) -> None:
+        self.attr.record_unused(e.cause, e.size)
+
+    def reset_attr(self) -> None:
+        self.attr = AttributionTable()
 
     def resize(self, main_bytes: int) -> None:
         """Re-budget both spaces, keeping the preemptive fraction; overflow
@@ -138,6 +159,7 @@ class TwoSpaceCache:
             wait = max(0.0, e.available_at - now)
             self.stats.hits += 1
             self.stats.prefetch_hits += 1
+            self.attr.record_hit(e.cause, e.size)
             if wait > 0:
                 self.stats.prefetch_waits += 1
             self.main.put(key, _Entry(e.value, e.size))
@@ -150,16 +172,26 @@ class TwoSpaceCache:
 
     # -- fills -----------------------------------------------------------
     def put_demand(self, key, value, size: int) -> None:
+        old = self.preemptive.peek(key)
+        if old is not None:
+            # a demand fetch raced the prefetched copy: the prefetch
+            # never got its first touch — pure waste
+            self.attr.record_unused(old.cause, old.size)
         self.preemptive.remove(key)
         self.main.put(key, _Entry(value, size))
 
-    def put_prefetch(self, key, value, size: int, available_at: float) -> bool:
+    def put_prefetch(self, key, value, size: int, available_at: float,
+                     cause=None) -> bool:
         """Admit a prefetched item (skips items already cached).  Returns
         True if admitted (counted against precision)."""
         if key in self.main or key in self.preemptive:
             return False
         self.stats.prefetches += 1
-        self.preemptive.put(key, _Entry(value, size, available_at))
+        self.attr.record_prefetch(cause, size)
+        self.preemptive.put(key, _Entry(value, size, available_at, cause))
+        if key not in self.preemptive:
+            # too big for the preemptive budget: dropped on arrival
+            self.attr.record_unused(cause, size)
         return True
 
     # -- writes & coherence ----------------------------------------------
@@ -168,13 +200,21 @@ class TwoSpaceCache:
         item as most recent (paper §4.4)."""
         self.stats.writes += 1
         if key in self.preemptive:
-            self.preemptive.put(key, _Entry(value, size))
+            # keep the attribution tag: presence is still owed to the
+            # prefetch, even though the value was just superseded
+            old = self.preemptive.peek(key)
+            self.preemptive.put(key, _Entry(value, size, cause=old.cause))
+            if key not in self.preemptive:
+                self.attr.record_unused(old.cause, old.size)
         else:
             self.main.put(key, _Entry(value, size))
 
     def invalidate(self, key) -> None:
         """Coherence notification from the store-side monitor (another
         client wrote this item)."""
+        old = self.preemptive.peek(key)
+        if old is not None:
+            self.attr.record_unused(old.cause, old.size)
         removed = self.main.remove(key) | self.preemptive.remove(key)
         if removed:
             self.stats.invalidations += 1

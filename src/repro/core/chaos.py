@@ -207,6 +207,11 @@ class ChaosEngine:
         self.duplicated = 0
         self.partition_blocks = 0
         self.delayed = 0
+        #: Palpascope verdict for the most recent undelivered message:
+        #: ``"partition"`` or ``"link"`` (None after a delivery).  The
+        #: sender cannot tell the two apart — the trace can, which is
+        #: the point: a dropped RPC span names the fault that ate it.
+        self.last_drop_reason = None
 
     # -- deterministic (RNG-free) queries ---------------------------------
 
@@ -263,8 +268,10 @@ class ChaosEngine:
         receiver wasted service; reorder falls out of per-message jitter
         (two back-to-back sends can complete out of order).
         """
+        self.last_drop_reason = None
         if self.partitioned(now, src, dst):
             self.partition_blocks += 1
+            self.last_drop_reason = "partition"
             return False, 0.0, 0
         delay = 0.0
         dups = 0
@@ -276,6 +283,7 @@ class ChaosEngine:
             rng = self._rng(src, dst)
             if f.drop > 0.0 and rng.random() < f.drop:
                 self.dropped += 1
+                self.last_drop_reason = "link"
                 return False, 0.0, 0
             if f.delay > 0.0 or f.jitter > 0.0:
                 delay += f.delay + (f.jitter * float(rng.random())

@@ -50,6 +50,17 @@ from .membership import (
 )
 from .metastore import PatternMetastore, VerdictBoard
 from .mining import Pattern
+from .obs import (
+    EVENT_HINT,
+    EVENT_QUORUM,
+    EVENT_READ_REPAIR,
+    EVENT_RETRY,
+    EVENT_SLOPPY,
+    NULL_TRACER,
+    SPAN_ROUTE,
+    SPAN_WRITE,
+    AttributionTable,
+)
 from .palpatine import BaselineClient, PalpatineClient, PalpatineConfig
 from .ptree import PTreeIndex
 from .versions import (
@@ -181,6 +192,8 @@ class ShardedDKVStore:
         self.sibling_merges = 0      # deterministic LWW-by-dot resolutions
         #: deterministic fault injection (repro.core.chaos); None = calm
         self.chaos = None
+        #: Palpascope tracer (repro.core.obs); NULL_TRACER = off, free
+        self.tracer = NULL_TRACER
         #: this coordinator's identity: dots are (counter, coord_id) pairs
         #: and the chaos engine addresses coordinators as "c<id>"
         self.coord_id = 0
@@ -232,6 +245,16 @@ class ShardedDKVStore:
             c.chaos = engine
         for i, s in enumerate(self.shards):
             s.connect_chaos(engine, i)
+
+    def enable_tracing(self, tracer) -> None:
+        """Install a :class:`~repro.core.obs.Tracer` on this cluster:
+        coordinator front-ends open routing/write spans and every storage
+        node opens RPC/service spans nested inside them (same wiring shape
+        as :meth:`enable_chaos`)."""
+        for c in self._coordinators:
+            c.tracer = tracer
+        for s in self.shards:
+            s.tracer = tracer
 
     def _chaos_tick(self, now: float) -> None:
         """Advance the fault timeline to ``now`` (op-driven, so crash
@@ -482,6 +505,7 @@ class ShardedDKVStore:
                 self._note_timeout(s)
                 continue
             self.read_repairs += 1
+            self.tracer.event(EVENT_READ_REPAIR, now, node=s, key=repr(key))
 
     def _fresh_replicas(self, key, now: float,
                         exclude: Sequence[int] = ()) -> list[int]:
@@ -627,81 +651,103 @@ class ShardedDKVStore:
         W + R > N reads are never stale."""
         self._chaos_tick(now)
         self._maybe_probe(now)
-        if self.read_quorum <= 1:
-            waited, retries, drops = 0.0, 0, 0
-            while True:
-                pick, w, r = self._pick_serving(key, now + waited)
-                waited += w
-                retries += r
-                fut = self.shards[pick].get_async(key, now + waited,
-                                                  src=self.coord_name)
-                if not fut.dropped:
-                    break
-                # chaos ate the RPC: the coordinator waits out its ack
-                # deadline (rpc_timeout), feeds the detector, and retries
-                # the routing decision — capped so a link dropping 100%
-                # still terminates (as unavailability, not a hang)
-                self._note_timeout(pick)
-                waited += self.rpc_timeout
-                retries += 1
-                drops += 1
-                if drops >= 8:
-                    raise KeyError(
-                        f"read of {key!r} dropped {drops} times")
-            self._note_ack(pick, fut.done_at - (now + waited))
-            fut.node = pick
-            fut.issue_time = now
-            fut.retries = retries
-            fut.timed_out = retries > 0
-            return fut
-        live, expired, waited_out = self._quorum_candidates(key, now)
-        for s in expired:
-            self._note_timeout(s)
-        fresh = set(self._fresh_replicas(key, now, exclude=expired))
-        futs = {}
-        dropped = []
-        for s in live:
-            f = self.shards[s].get_async(key, now, src=self.coord_name)
-            if f.dropped:
-                # a lost quorum leg: one detector miss, the read degrades
-                # to the legs that acked (and waits out the ack deadline)
+        tr = self.tracer
+        sp = tr.start(SPAN_ROUTE, now)
+        if sp.live:
+            sp.set(op="get", key=repr(key), coord=self.coord_name,
+                   shard=self.shard_of(key))
+        try:
+            if self.read_quorum <= 1:
+                waited, retries, drops = 0.0, 0, 0
+                while True:
+                    pick, w, r = self._pick_serving(key, now + waited)
+                    waited += w
+                    retries += r
+                    fut = self.shards[pick].get_async(key, now + waited,
+                                                      src=self.coord_name)
+                    if not fut.dropped:
+                        break
+                    # chaos ate the RPC: the coordinator waits out its ack
+                    # deadline (rpc_timeout), feeds the detector, and retries
+                    # the routing decision — capped so a link dropping 100%
+                    # still terminates (as unavailability, not a hang)
+                    self._note_timeout(pick)
+                    waited += self.rpc_timeout
+                    tr.event(EVENT_RETRY, now + waited, node=pick)
+                    retries += 1
+                    drops += 1
+                    if drops >= 8:
+                        raise KeyError(
+                            f"read of {key!r} dropped {drops} times")
+                self._note_ack(pick, fut.done_at - (now + waited))
+                fut.node = pick
+                fut.issue_time = now
+                fut.retries = retries
+                fut.timed_out = retries > 0
+                if sp.live:
+                    sp.set(node=pick, retries=retries, waited=waited)
+                sp.finish(fut.done_at)
+                return fut
+            live, expired, waited_out = self._quorum_candidates(key, now)
+            for s in expired:
                 self._note_timeout(s)
-                dropped.append(s)
-                continue
-            futs[s] = f
-            self._note_ack(s, f.done_at - now)
-        expired = list(expired) + dropped
-        waited_out = waited_out or bool(dropped)
-        if not futs:
-            raise KeyError(f"no replica of {key!r} acked the quorum read")
-        if self.strict_read_quorum and len(futs) < self.read_quorum:
-            raise KeyError(
-                f"strict quorum read of {key!r}: {len(futs)} acks "
-                f"< R={self.read_quorum}")
-        responders = fresh & set(futs)
-        if not responders:
-            # every fresh replica's leg was lost: strict mode refuses,
-            # default mode serves the freshest *responder* (counted stale)
-            if self.strict_read_quorum:
+            fresh = set(self._fresh_replicas(key, now, exclude=expired))
+            futs = {}
+            dropped = []
+            for s in live:
+                f = self.shards[s].get_async(key, now, src=self.coord_name)
+                if f.dropped:
+                    # a lost quorum leg: one detector miss, the read degrades
+                    # to the legs that acked (and waits out the ack deadline)
+                    self._note_timeout(s)
+                    dropped.append(s)
+                    continue
+                futs[s] = f
+                self._note_ack(s, f.done_at - now)
+            expired = list(expired) + dropped
+            waited_out = waited_out or bool(dropped)
+            if not futs:
                 raise KeyError(
-                    f"strict quorum read of {key!r} lost every fresh "
-                    f"replica")
-            self.stale_reads += 1
-            responders = set(futs)
-        q = min(self.read_quorum, len(futs))
-        best = min(responders, key=lambda s: futs[s].done_at)
-        # complete at the q-th fastest ack, but never before the replica
-        # that supplied the value acks: when only a slow rejoiner holds
-        # the newest version, the fresh read costs that replica's latency
-        # (the degraded-window tail this subsystem is measured on).  A
-        # quorum left short by crashed replicas waits out their timeout.
-        done = max(sorted(f.done_at for f in futs.values())[q - 1],
-                   futs[best].done_at)
-        if waited_out:
-            done = max(done, now + self.rpc_timeout)
-        return RPCFuture((key,), futs[best].values, now, done,
-                         done_each=[done], node=best,
-                         timed_out=bool(expired), retries=len(expired))
+                    f"no replica of {key!r} acked the quorum read")
+            if self.strict_read_quorum and len(futs) < self.read_quorum:
+                raise KeyError(
+                    f"strict quorum read of {key!r}: {len(futs)} acks "
+                    f"< R={self.read_quorum}")
+            responders = fresh & set(futs)
+            if not responders:
+                # every fresh replica's leg was lost: strict mode refuses,
+                # default mode serves the freshest *responder* (counted
+                # stale)
+                if self.strict_read_quorum:
+                    raise KeyError(
+                        f"strict quorum read of {key!r} lost every fresh "
+                        f"replica")
+                self.stale_reads += 1
+                responders = set(futs)
+            q = min(self.read_quorum, len(futs))
+            best = min(responders, key=lambda s: futs[s].done_at)
+            # complete at the q-th fastest ack, but never before the replica
+            # that supplied the value acks: when only a slow rejoiner holds
+            # the newest version, the fresh read costs that replica's latency
+            # (the degraded-window tail this subsystem is measured on).  A
+            # quorum left short by crashed replicas waits out their timeout.
+            done = max(sorted(f.done_at for f in futs.values())[q - 1],
+                       futs[best].done_at)
+            if waited_out:
+                done = max(done, now + self.rpc_timeout)
+            tr.event(EVENT_QUORUM, done, q=q, acks=len(futs),
+                     lost=len(expired))
+            if sp.live:
+                sp.set(node=best, retries=len(expired))
+            sp.finish(done)
+            return RPCFuture((key,), futs[best].values, now, done,
+                             done_each=[done], node=best,
+                             timed_out=bool(expired), retries=len(expired))
+        except BaseException:
+            sp.mark("error")
+            raise
+        finally:
+            tr.end(sp)
 
     def _scatter_read_one(self, keys: Sequence, now: float,
                           fetch: Callable) -> tuple[list, list, int]:
@@ -776,6 +822,22 @@ class ShardedDKVStore:
         future's ``done_at`` is the slowest per-key completion."""
         self._chaos_tick(now)
         self._maybe_probe(now)
+        tr = self.tracer
+        sp = tr.start(SPAN_ROUTE, now)
+        if sp.live:
+            sp.set(op="multi_get", n=len(keys), coord=self.coord_name)
+        try:
+            return self._multi_get_async(keys, now, tr, sp)
+        except BaseException:
+            sp.mark("error")
+            raise
+        finally:
+            tr.end(sp)
+
+    def _multi_get_async(self, keys: Sequence, now: float, tr, sp
+                         ) -> RPCFuture:
+        """The scatter body of :meth:`multi_get_async`, inside its
+        routing span."""
         if self.read_quorum <= 1:
             def fetch(shard, sub_keys, t):
                 fut = self.shards[shard].multi_get_async(
@@ -785,8 +847,11 @@ class ShardedDKVStore:
                 return fut.values, fut.done_at
             vals, done_each, retries = self._scatter_read_one(
                 keys, now, fetch)
-            return RPCFuture(tuple(keys), vals, now,
-                             max(done_each, default=now),
+            worst = max(done_each, default=now)
+            if sp.live:
+                sp.set(retries=retries)
+            sp.finish(worst)
+            return RPCFuture(tuple(keys), vals, now, worst,
                              done_each=done_each,
                              timed_out=retries > 0, retries=retries)
         vals: list = [None] * len(keys)
@@ -854,6 +919,10 @@ class ShardedDKVStore:
                      for ds, fd, was_short
                      in zip(done_lists, fresh_done, short)]
         worst = max(done_each, default=now)
+        tr.event(EVENT_QUORUM, worst, q=q, lost=len(expired))
+        if sp.live:
+            sp.set(retries=len(expired))
+        sp.finish(worst)
         return RPCFuture(tuple(keys), vals, now, worst, done_each=done_each,
                          timed_out=bool(expired), retries=len(expired))
 
@@ -1005,6 +1074,23 @@ class ShardedDKVStore:
         divergence hinted handoff and read-repair exist to converge."""
         self._chaos_tick(now)
         self._maybe_probe(now)
+        tr = self.tracer
+        sp = tr.start(SPAN_WRITE, now)
+        if sp.live:
+            sp.set(key=repr(key), coord=self.coord_name,
+                   mode=self.write_mode)
+        try:
+            ret = self._put(key, value, now, tr)
+            sp.finish(ret)
+            return ret
+        except BaseException:
+            sp.mark("error")
+            raise
+        finally:
+            tr.end(sp)
+
+    def _put(self, key, value: bytes, now: float, tr) -> float:
+        """The replicated-write body of :meth:`put`, inside its span."""
         pref = list(self.replicas_of(key))
         known_failed = [s for s in pref if self._unavailable(s, now)]
         timed_out = [s for s in pref if s not in known_failed
@@ -1042,6 +1128,7 @@ class ShardedDKVStore:
                 if in_pref and s in holder_of:
                     continue         # handled via its sloppy successor below
                 self._add_hint(s, key, value, ver)
+                tr.event(EVENT_HINT, now, owner=s)
                 continue
             done = self.shards[s].put(key, value, now, src=self.coord_name)
             if done is None:
@@ -1049,6 +1136,7 @@ class ShardedDKVStore:
                 # hint and the detector hears the missed ack
                 self._note_timeout(s)
                 self._add_hint(s, key, value, ver)
+                tr.event(EVENT_HINT, now, owner=s, dropped=True)
                 dropped_any = True
                 continue
             self.shards[s].versions[key] = ver
@@ -1067,11 +1155,13 @@ class ShardedDKVStore:
                 # plain (holderless) hint — nothing landed on the sub
                 self._note_timeout(sub)
                 self._add_hint(owner, key, value, ver)
+                tr.event(EVENT_HINT, t0, owner=owner, dropped=True)
                 dropped_any = True
                 continue
             self.shards[sub].versions[key] = ver
             self._note_ack(sub)
             self._add_hint(owner, key, value, ver, holder=sub)
+            tr.event(EVENT_SLOPPY, done, owner=owner, holder=sub)
             self.sloppy_writes += 1
             acks.append(done)
             quorum_acks.append(done)
@@ -1156,7 +1246,8 @@ class ShardedDKVStore:
                      "strict_read_quorum", "record_acks", "_points",
                      "_owners", "_replica_cache", "_pending_rings",
                      "_pending_writes", "leases", "_watchers",
-                     "_membership_watchers", "chaos", "_coordinators"):
+                     "_membership_watchers", "chaos", "tracer",
+                     "_coordinators"):
             setattr(peer, attr, getattr(self, attr))
         # per-coordinator state: independent opinions and counters
         peer.detector = (FailureDetector() if self.detector is not None
@@ -1420,8 +1511,10 @@ class ShardedTwoSpaceCache:
     def put_demand(self, key, value, size: int) -> None:
         self._space(key).put_demand(key, value, size)
 
-    def put_prefetch(self, key, value, size: int, available_at: float) -> bool:
-        return self._space(key).put_prefetch(key, value, size, available_at)
+    def put_prefetch(self, key, value, size: int, available_at: float,
+                     cause=None) -> bool:
+        return self._space(key).put_prefetch(key, value, size, available_at,
+                                             cause=cause)
 
     def write(self, key, value, size: int) -> None:
         self._space(key).write(key, value, size)
@@ -1447,6 +1540,15 @@ class ShardedTwoSpaceCache:
 
     def per_shard_stats(self) -> list[CacheStats]:
         return [s.stats for s in self.spaces]
+
+    @property
+    def attr(self) -> AttributionTable:
+        """Per-pattern prefetch attribution merged over partitions."""
+        return AttributionTable.merged(s.attr for s in self.spaces)
+
+    def reset_attr(self) -> None:
+        for s in self.spaces:
+            s.reset_attr()
 
 
 # ---------------------------------------------------------------------------
@@ -1757,10 +1859,29 @@ class ClusterClient:
         for t in self.tenants:
             self.exchange.pull(t)
 
+    # -- observability -----------------------------------------------------
+    def enable_tracing(self, tracer) -> None:
+        """Install a tracer cluster-wide: the store's coordinators and
+        nodes plus every tenant's client-side hooks share one span stack,
+        so a trace follows an op from the tenant's cache lookup down to
+        the replica's service interval."""
+        if hasattr(self.store, "enable_tracing"):
+            self.store.enable_tracing(tracer)
+        else:
+            self.store.tracer = tracer
+        for t in self.tenants:
+            t.tracer = tracer
+
+    def aggregate_attribution(self) -> AttributionTable:
+        """Per-pattern prefetch attribution merged over tenants."""
+        return AttributionTable.merged(t.cache.attr for t in self.tenants)
+
     # -- telemetry ---------------------------------------------------------
     def reset_stats(self) -> None:
         for t in self.tenants:
             t.cache.stats = CacheStats()
+            if hasattr(t.cache, "reset_attr"):
+                t.cache.reset_attr()
 
     def aggregate_stats(self) -> CacheStats:
         return sum_stats(t.cache.stats for t in self.tenants)

@@ -36,6 +36,7 @@ from __future__ import annotations
 import numpy as np
 
 from .heuristics import HeuristicConfig, PrefetchEngine
+from .obs import PrefetchCause
 from .ptree import FlatForest, PTreeIndex
 
 __all__ = ["VectorizedPrefetchEngine", "build_engine", "advance_step",
@@ -126,6 +127,13 @@ class VectorizedPrefetchEngine:
         self._fetched = np.zeros(m, np.int64)   # jax path only (numpy
         self._n = 0                             # waves don't need it)
         self._op = 0
+        # Palpascope attribution: when enabled, ``on_request`` also
+        # records the forest node id behind each emitted item so
+        # ``last_attribution`` can name the pattern that caused it.
+        # Off by default — the decision microbenchmarks measure the
+        # bare walk.
+        self.attribute = False
+        self._last_nodes: np.ndarray | None = None
         self.replace_index(index)
 
     # ------------------------------------------------------------------
@@ -207,18 +215,23 @@ class VectorizedPrefetchEngine:
         self._adv_off = np.concatenate(
             [np.zeros(1, np.int64), np.cumsum(cnt)]).astype(np.int64)
         self._adv_items = flat.items[u]
+        self._adv_nodes = u                     # parallel: node behind item
         # narrow waves additionally get a fixed-width padded item matrix:
         # one row gather + one sentinel filter per op instead of ragged
         # range assembly.  Guarded by width so a bushy generation can't
         # blow up memory n_nodes × max-branching.
         width = int(cnt.max()) if len(cnt) else 0
         self._adv_pad = None
+        self._adv_pad_nodes = None
         if 0 < width <= 8:
             pad = np.full((n, width), -1, np.int64)
             col = np.arange(len(u), dtype=np.int64) - np.repeat(
                 self._adv_off[:-1], cnt)
             pad[owner, col] = self._adv_items
             self._adv_pad = pad
+            padn = np.full((n, width), -1, np.int64)
+            padn[owner, col] = u
+            self._adv_pad_nodes = padn
         # sentinel-padded edge table: searchsorted positions can be used
         # unclipped (keys never reach int64 max)
         self._ek = np.concatenate(
@@ -251,9 +264,12 @@ class VectorizedPrefetchEngine:
         self._init_fetched = flat.tree_max_depth
 
     # ------------------------------------------------------------------
-    def _advance(self, item: int) -> list[np.ndarray]:
+    def _advance(self, item: int) -> tuple[list[np.ndarray],
+                                           list[np.ndarray]]:
         """Advance all live contexts; returns the advancement wave item
-        arrays (context-major) and compacts the survivors in place."""
+        arrays (context-major) plus — when ``attribute`` is on — the
+        parallel wave node-id arrays, and compacts the survivors in
+        place."""
         n = self._n
         flat = self.flat
         nodes, trees = self._node[:n], self._tree[:n]
@@ -263,21 +279,25 @@ class VectorizedPrefetchEngine:
                 self._jax_forest, flat, nodes, trees, self._fetched[:n],
                 item, self._p_depth, max_contexts=self.max_contexts)
             parts: list[np.ndarray] = []
+            nparts: list[np.ndarray] = []
             if len(st["wave_nodes"]):
-                parts.append(flat.items[st["wave_nodes"]])
+                wn = np.asarray(st["wave_nodes"])
+                parts.append(flat.items[wn])
+                if self.attribute:
+                    nparts.append(wn)
             keep = st["alive"]
             k = int(keep.sum())
             self._node[:k] = st["nodes"][keep]
             self._tree[:k] = trees[keep]
             self._fetched[:k] = st["fetched"][keep]
             self._n = k
-            return parts
+            return parts, nparts
         # numpy fast path: one searchsorted advances every context; the
         # wave is a precomputed CSR slice per advanced-onto node (see
         # _precompute_advancement for why that is exact, not a cache)
         if not flat.edge_keys.size or not 0 <= item < flat.item_stride:
             self._n = 0              # nothing matches, nothing can stay
-            return []
+            return [], []
         keys = nodes * flat.item_stride + item
         pos = self._ek.searchsorted(keys)
         found = self._ek[pos] == keys
@@ -292,14 +312,24 @@ class VectorizedPrefetchEngine:
                     & (flat.items[nodes] == item))
             alive = (found & self._nonterm[new_nodes]) | stay
             em = new_nodes[found]
-        if self._adv_pad is not None:
+        nparts = []
+        if self._adv_pad is not None and not self.attribute:
             w = self._adv_pad[em].ravel()
             w = w[w >= 0]
             parts = [w] if len(w) else []
+        elif self._adv_pad is not None:
+            w = self._adv_pad[em].ravel()
+            mask = w >= 0
+            w = w[mask]
+            parts = [w] if len(w) else []
+            if len(w):
+                nparts = [self._adv_pad_nodes[em].ravel()[mask]]
         else:
             idx, _ = _ranges_concat(self._adv_off[em],
                                     self._adv_off[em + 1])
             parts = [self._adv_items[idx]] if len(idx) else []
+            if len(idx) and self.attribute:
+                nparts = [self._adv_nodes[idx]]
         if alive.all():
             self._node[:n] = new_nodes
         else:
@@ -307,14 +337,14 @@ class VectorizedPrefetchEngine:
             self._node[:k] = new_nodes[alive]
             self._tree[:k] = trees[alive]
             self._n = k
-        return parts
+        return parts, nparts
 
     def on_request(self, item: int) -> list[int]:
         """Returns item ids to prefetch (deduplicated, wave order kept) —
         one array program regardless of how many contexts are live."""
         self._op += 1
         item = int(item)
-        parts = self._advance(item) if self._n else []
+        parts, nparts = self._advance(item) if self._n else ([], [])
         flat = self.flat
         t = flat.root_tree.get(item)
         if t is not None:
@@ -326,6 +356,8 @@ class VectorizedPrefetchEngine:
                 w = self._wave_nodes[self._wave_off[t]:self._wave_off[t + 1]]
                 if len(w):
                     parts.append(flat.items[w])
+                    if self.attribute:
+                        nparts.append(w)
                 if self._progressive and flat.tree_max_depth[t] > 0:
                     if self._n >= self.max_contexts:
                         # evict the stalest context.  Every surviving
@@ -343,6 +375,7 @@ class VectorizedPrefetchEngine:
                     self._fetched[i] = self._init_fetched[t]
                     self._n = i + 1
         if not parts:
+            self._last_nodes = None
             return []
         wave = parts[0] if len(parts) == 1 else np.concatenate(parts)
         # first-occurrence dedup, wave order kept (np.unique semantics,
@@ -354,7 +387,28 @@ class VectorizedPrefetchEngine:
         np.not_equal(sw[1:], sw[:-1], out=m[1:])
         first = order[m]
         first.sort()
+        if self.attribute:
+            nodes = nparts[0] if len(nparts) == 1 else np.concatenate(nparts)
+            self._last_nodes = nodes[first]
+        else:
+            self._last_nodes = None
         return wave[first].tolist()
+
+    def last_attribution(self) -> list[PrefetchCause]:
+        """One :class:`PrefetchCause` per item of the last ``on_request``
+        return (same order): the emitting node's tree root item, its
+        depth (= confirmed-prefix length), the heuristic, and the
+        node's cumulative confidence.  Empty unless ``attribute``."""
+        nodes = self._last_nodes
+        if nodes is None or not len(nodes):
+            return []
+        flat = self.flat
+        roots = flat.items[flat.tree_start[flat.tree_of[nodes]]]
+        h = self.cfg.name
+        return [PrefetchCause(int(r), int(d), h, float(c))
+                for r, d, c in zip(roots.tolist(),
+                                   flat.depth[nodes].tolist(),
+                                   flat.cum_prob[nodes].tolist())]
 
 
 def build_engine(index: PTreeIndex, cfg: HeuristicConfig,

@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from .obs import PrefetchCause
 from .ptree import PNode, PTree, PTreeIndex
 
 __all__ = ["HeuristicConfig", "PrefetchContext", "PrefetchEngine", "HEURISTICS"]
@@ -149,6 +150,9 @@ class PrefetchEngine:
         self.max_contexts = max_contexts
         self.contexts: list[PrefetchContext] = []
         self._op = 0
+        # Palpascope attribution (same surface as the vectorized twin)
+        self.attribute = False
+        self._last_causes: list[PrefetchCause] = []
 
     @property
     def n_live(self) -> int:
@@ -164,10 +168,14 @@ class PrefetchEngine:
         """Returns item ids to prefetch (deduplicated, wave order kept)."""
         self._op += 1
         wave: list[PNode] = []
+        src: list[PTree] = []    # parallel owner trees (attribution only)
         # 1. advance live contexts along the confirmed subsequences
         live: list[PrefetchContext] = []
         for ctx in self.contexts:
-            wave.extend(ctx.on_request(item, self._op))
+            w = ctx.on_request(item, self._op)
+            wave.extend(w)
+            if self.attribute and w:
+                src.extend([ctx.tree] * len(w))
             if ctx.alive:
                 live.append(ctx)
         self.contexts = live
@@ -182,7 +190,10 @@ class PrefetchEngine:
             else:
                 ctx = PrefetchContext(tree, self.cfg)
                 ctx.stamp = self._op
-                wave.extend(ctx.initial())
+                w = ctx.initial()
+                wave.extend(w)
+                if self.attribute and w:
+                    src.extend([tree] * len(w))
                 if ctx.alive:
                     if len(self.contexts) >= self.max_contexts:
                         # saturated: evict the stalest context (least
@@ -194,8 +205,19 @@ class PrefetchEngine:
                     self.contexts.append(ctx)
         seen: set = set()
         out: list[int] = []
-        for nd in wave:
+        causes: list[PrefetchCause] = []
+        for i, nd in enumerate(wave):
             if nd.item not in seen:
                 seen.add(nd.item)
                 out.append(nd.item)
+                if self.attribute:
+                    tr = src[i]
+                    causes.append(PrefetchCause(
+                        tr.root.item, nd.depth, self.cfg.name, nd.cum_prob))
+        self._last_causes = causes
         return out
+
+    def last_attribution(self) -> list[PrefetchCause]:
+        """One :class:`PrefetchCause` per item of the last ``on_request``
+        return (same order).  Empty unless ``attribute`` is enabled."""
+        return self._last_causes

@@ -66,6 +66,8 @@ import dataclasses
 import hashlib
 from typing import Callable, Iterable, Optional, Sequence
 
+from .obs import NULL_TRACER, SPAN_MEMBERSHIP
+
 __all__ = [
     "MoveReport",
     "MembershipEvent",
@@ -622,9 +624,16 @@ def _relocate(store, kind: str, node: int, now: float,
                         store.shards[src].versions.get(k, 0))
     store._pending_rings.append(new_ring)  # mid-move writes reach new owners
     store._membership_depth += 1
+    tr = getattr(store, "tracer", NULL_TRACER)
+    sp = tr.start(SPAN_MEMBERSHIP, now)
+    if sp.live:
+        sp.set(kind=kind, node=node, affected=len(affected),
+               streamed=len(streamed), hinted=len(hinted))
     try:
         bytes_streamed, done_at = _stream_ranges(store, moves, now, on_batch)
+        sp.finish(done_at)
     except BaseException:
+        sp.mark("error")
         # an exception escaping the stream (e.g. an uncaught LeaseConflict
         # from a nested change's on_batch) aborts THIS change: release its
         # lease and retract its pending ring, or both leak forever and
@@ -642,6 +651,8 @@ def _relocate(store, kind: str, node: int, now: float,
             pass
         store.leases.release(lease)
         raise
+    finally:
+        tr.end(sp)
     store._membership_depth -= 1
 
     report = MoveReport(kind, node, len(resident), len(streamed), gained_n,

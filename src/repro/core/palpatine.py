@@ -18,6 +18,15 @@ from .cache import TwoSpaceCache
 from .decision import build_engine
 from .heuristics import HeuristicConfig
 from .metastore import PatternMetastore
+from .obs import (
+    NULL_TRACER,
+    SPAN_CACHE,
+    SPAN_DECISION,
+    SPAN_DEMAND,
+    SPAN_OP,
+    SPAN_PREFETCH,
+    EVENT_SHED,
+)
 from .mining import (
     BITMAP_ALGOS,
     MiningParams,
@@ -117,6 +126,12 @@ class PalpatineClient:
         self.demand_timeouts = 0
         store.watch(self._on_store_write)
         self._in_write = False
+        # Palpascope: share the store's tracer (NULL_TRACER unless
+        # enable_tracing was called on the store/cluster), and have both
+        # engines name the pattern behind every emitted prefetch target
+        self.tracer = getattr(store, "tracer", NULL_TRACER)
+        self.engine.attribute = True
+        self.col_engine.attribute = True
 
     # ------------------------------------------------------------------
     # Client API (mirrors the store's get/put — transparent, §4.5)
@@ -136,31 +151,52 @@ class PalpatineClient:
     def read(self, container) -> tuple[Any, float]:
         """Returns (value, virtual latency).  Advances the virtual clock."""
         now = self.clock.now
-        self.logger.record(now, container)
-        iid = self.logger.db.item_id(container)
-        if self.cfg.column_mining:
-            self.col_logger.record(now, self._generalize(container))
-
-        hit = self.cache.lookup(iid, now)
-        if hit is not None and hit[1] <= self.cfg.prefetch_wait_cap:
-            value, wait = hit
-            latency = CACHE_OVERHEAD + wait
-        else:
-            # miss, or the prefetch is too far in flight: demand-fetch wins
-            # the race (timeliness failure, counted against precision by
-            # the still-pending preemptive entry)
-            value, done_at = self._demand_fetch(self._store_key(container), now)
-            latency = (done_at - now) + CACHE_OVERHEAD
-            if value is not None:
-                self.cache.put_demand(iid, value, len(value))
-
-        if self.cfg.prefetch_enabled:
-            self._prefetch(iid, now)
+        tr = self.tracer
+        sp = tr.start(SPAN_OP, now)
+        try:
+            self.logger.record(now, container)
+            iid = self.logger.db.item_id(container)
+            if sp.live:
+                sp.set(op="read", key=self._store_key(container))
             if self.cfg.column_mining:
-                self._prefetch_columns(container, now)
-        self._maybe_online_mine()
-        self.clock.advance(latency)
-        return value, latency
+                self.col_logger.record(now, self._generalize(container))
+
+            csp = tr.span(SPAN_CACHE, now)
+            hit = self.cache.lookup(iid, now)
+            if csp.live:
+                csp.set(hit=hit is not None)
+            tr.end(csp, now)
+            if hit is not None and hit[1] <= self.cfg.prefetch_wait_cap:
+                value, wait = hit
+                latency = CACHE_OVERHEAD + wait
+            else:
+                # miss, or the prefetch is too far in flight: demand-fetch
+                # wins the race (timeliness failure, counted against
+                # precision by the still-pending preemptive entry)
+                dsp = tr.span(SPAN_DEMAND, now)
+                try:
+                    value, done_at = self._demand_fetch(
+                        self._store_key(container), now)
+                    dsp.finish(done_at)
+                finally:
+                    tr.end(dsp)
+                latency = (done_at - now) + CACHE_OVERHEAD
+                if value is not None:
+                    self.cache.put_demand(iid, value, len(value))
+
+            if self.cfg.prefetch_enabled:
+                self._prefetch(iid, now)
+                if self.cfg.column_mining:
+                    self._prefetch_columns(container, now)
+            self._maybe_online_mine()
+            self.clock.advance(latency)
+            sp.finish(now + latency)
+            return value, latency
+        except BaseException:
+            sp.mark("error")
+            raise
+        finally:
+            tr.end(sp)
 
     def read_many(self, containers: Sequence) -> tuple[list, float]:
         """Batched read with overlapping in-flight demand fetches.
@@ -173,62 +209,92 @@ class PalpatineClient:
         longest still-in-flight prefetch) lands, not at the sum of
         per-key round trips.  Returns (values, batch latency)."""
         now = self.clock.now
-        self.logger.record_many(now, containers)
-        if self.cfg.column_mining:
-            self.col_logger.record_many(
-                now, [self._generalize(c) for c in containers])
-        values: list = [None] * len(containers)
-        iids: list[int] = []
-        misses: list[tuple[int, int, Any]] = []   # (position, iid, key)
-        worst_wait = 0.0
-        for pos, container in enumerate(containers):
-            iid = self.logger.db.item_id(container)
-            iids.append(iid)
-            hit = self.cache.lookup(iid, now)
-            if hit is not None and hit[1] <= self.cfg.prefetch_wait_cap:
-                values[pos] = hit[0]
-                worst_wait = max(worst_wait, hit[1])
-            else:
-                misses.append((pos, iid, self._store_key(container)))
+        tr = self.tracer
+        sp = tr.start(SPAN_OP, now)
+        try:
+            if sp.live:
+                sp.set(op="read_many", n=len(containers))
+            self.logger.record_many(now, containers)
+            if self.cfg.column_mining:
+                self.col_logger.record_many(
+                    now, [self._generalize(c) for c in containers])
+            values: list = [None] * len(containers)
+            iids: list[int] = []
+            misses: list[tuple[int, int, Any]] = []   # (position, iid, key)
+            worst_wait = 0.0
+            csp = tr.span(SPAN_CACHE, now)
+            for pos, container in enumerate(containers):
+                iid = self.logger.db.item_id(container)
+                iids.append(iid)
+                hit = self.cache.lookup(iid, now)
+                if hit is not None and hit[1] <= self.cfg.prefetch_wait_cap:
+                    values[pos] = hit[0]
+                    worst_wait = max(worst_wait, hit[1])
+                else:
+                    misses.append((pos, iid, self._store_key(container)))
+            if csp.live:
+                csp.set(hits=len(containers) - len(misses),
+                        misses=len(misses))
+            tr.end(csp, now)
 
-        done_at = now + worst_wait
-        if misses:
-            keys = [k for _, _, k in misses]
-            multi_async = getattr(self.store, "multi_get_async", None)
-            if multi_async is None:
-                vals, lat = self.store.multi_get(keys)
-                batch_done = now + lat
-            else:
-                fut = multi_async(keys, now)
-                vals, batch_done = fut.result()
-                if getattr(fut, "timed_out", False):
-                    self.demand_timeouts += 1
-            for (pos, iid, _), v in zip(misses, vals):
-                values[pos] = v
-                if v is not None:
-                    self.cache.put_demand(iid, v, len(v))
-            done_at = max(done_at, batch_done)
+            done_at = now + worst_wait
+            if misses:
+                keys = [k for _, _, k in misses]
+                dsp = tr.span(SPAN_DEMAND, now)
+                try:
+                    multi_async = getattr(self.store, "multi_get_async", None)
+                    if multi_async is None:
+                        vals, lat = self.store.multi_get(keys)
+                        batch_done = now + lat
+                    else:
+                        fut = multi_async(keys, now)
+                        vals, batch_done = fut.result()
+                        if getattr(fut, "timed_out", False):
+                            self.demand_timeouts += 1
+                    dsp.finish(batch_done)
+                finally:
+                    tr.end(dsp)
+                for (pos, iid, _), v in zip(misses, vals):
+                    values[pos] = v
+                    if v is not None:
+                        self.cache.put_demand(iid, v, len(v))
+                done_at = max(done_at, batch_done)
 
-        latency = (done_at - now) + CACHE_OVERHEAD * len(containers)
-        if self.cfg.prefetch_enabled:
-            for iid, container in zip(iids, containers):
-                self._prefetch(iid, now)
-                if self.cfg.column_mining:
-                    self._prefetch_columns(container, now)
-        self._maybe_online_mine()
-        self.clock.advance(latency)
-        return values, latency
+            latency = (done_at - now) + CACHE_OVERHEAD * len(containers)
+            if self.cfg.prefetch_enabled:
+                for iid, container in zip(iids, containers):
+                    self._prefetch(iid, now)
+                    if self.cfg.column_mining:
+                        self._prefetch_columns(container, now)
+            self._maybe_online_mine()
+            self.clock.advance(latency)
+            sp.finish(now + latency)
+            return values, latency
+        except BaseException:
+            sp.mark("error")
+            raise
+        finally:
+            tr.end(sp)
 
     def write(self, container, value: bytes) -> float:
         """Write-through cache update + async store write (§4.4); returns
         the (small) foreground latency."""
         now = self.clock.now
+        tr = self.tracer
+        sp = tr.start(SPAN_OP, now)
         iid = self.logger.db.item_id(container)
+        if sp.live:
+            sp.set(op="write", key=self._store_key(container))
         self._in_write = True
         try:
             self.store.put(self._store_key(container), value, now)
+            sp.finish(now + CACHE_OVERHEAD)
+        except BaseException:
+            sp.mark("error")
+            raise
         finally:
             self._in_write = False
+            tr.end(sp)
         self.cache.write(iid, value, len(value))
         self.clock.advance(CACHE_OVERHEAD)
         return CACHE_OVERHEAD
@@ -376,31 +442,58 @@ class PalpatineClient:
             return
         if self.store.backlog(now) > self.cfg.backlog_cap:
             return
+        causes = self.col_engine.last_attribution() or [None] * len(targets)
+        memo: dict = {}
         concrete = []
-        for t in targets:
+        for t, c in zip(targets, causes):
             table, _, col = self.col_logger.db.item(t)
             ckey = (table, row, col)
             if not self.store.contains(ckey):
                 continue
             iid = self.logger.db.item_id(ckey)
             if not self.cache.contains(iid):
-                concrete.append((iid, ckey))
+                concrete.append(
+                    (iid, ckey, self._resolve_cause(c, memo, column=True)))
         for i in range(0, len(concrete), self.cfg.prefetch_batch):
             batch = concrete[i:i + self.cfg.prefetch_batch]
-            keys = [k for _, k in batch]
+            keys = [k for _, k, _ in batch]
             vals, done_ats = self.store.background_multi_get(
                 keys, now, self.cfg.backlog_cap)
-            for (iid, _), v, done_at in zip(batch, vals, done_ats):
+            for (iid, _, cause), v, done_at in zip(batch, vals, done_ats):
                 if v is not None:
-                    self.cache.put_prefetch(iid, v, len(v), done_at)
+                    self.cache.put_prefetch(iid, v, len(v), done_at,
+                                            cause=cause)
 
     # ------------------------------------------------------------------
     # Prefetching (background, §4.1 step j / §4.5 batching)
     # ------------------------------------------------------------------
+    def _resolve_cause(self, cause, memo: dict, column: bool = False):
+        """Rewrite a cause's tree-root *item id* (client-local vocab) into
+        the root *container key*, so attribution rows aggregate across
+        tenants/shards that number items differently."""
+        if cause is None:
+            return None
+        key = memo.get(cause.root)
+        if key is None:
+            db = self.col_logger.db if column else self.logger.db
+            key = memo[cause.root] = db.item(cause.root)
+        return dataclasses.replace(cause, root=key)
+
     def _prefetch(self, iid: int, now: float) -> None:
+        tr = self.tracer
         if self.store.backlog(now) > self.cfg.backlog_cap:
+            tr.event(EVENT_SHED, now)
             return  # background channel(s) saturated: shed prefetch load
-        wanted = [i for i in self.engine.on_request(iid)
+        dsp = tr.span(SPAN_DECISION, now)
+        targets = self.engine.on_request(iid)
+        causes = (self.engine.last_attribution() or [None] * len(targets)) \
+            if targets else []
+        if dsp.live:
+            dsp.set(targets=len(targets))
+        tr.end(dsp, now)
+        memo: dict = {}
+        wanted = [(i, self._resolve_cause(c, memo))
+                  for i, c in zip(targets, causes)
                   if not self.cache.contains(i)]
         if not wanted:
             return
@@ -412,15 +505,29 @@ class PalpatineClient:
         rest = wanted[1:]
         for i in range(0, len(rest), self.cfg.prefetch_batch):
             batches.append(rest[i:i + self.cfg.prefetch_batch])
-        for batch in batches:
-            if not batch:
-                continue
-            keys = [self._store_key_by_id(i) for i in batch]
-            vals, done_ats = self.store.background_multi_get(
-                keys, now, self.cfg.backlog_cap)
-            for i, v, done_at in zip(batch, vals, done_ats):
-                if v is not None:
-                    self.cache.put_prefetch(i, v, len(v), done_at)
+        psp = tr.span(SPAN_PREFETCH, now)
+        try:
+            admitted, last_done = 0, now
+            for batch in batches:
+                if not batch:
+                    continue
+                keys = [self._store_key_by_id(i) for i, _ in batch]
+                vals, done_ats = self.store.background_multi_get(
+                    keys, now, self.cfg.backlog_cap)
+                for (i, cause), v, done_at in zip(batch, vals, done_ats):
+                    if v is not None:
+                        self.cache.put_prefetch(i, v, len(v), done_at,
+                                                cause=cause)
+                        admitted += 1
+                        if done_at > last_done:
+                            last_done = done_at
+            if psp.live:
+                psp.set(n_targets=len(wanted), n_admitted=admitted,
+                        done_at=last_done)
+        finally:
+            # background work: the span closes at issue time (children
+            # nest within the op) — batch completion is the done_at field
+            tr.end(psp, now)
 
     # ------------------------------------------------------------------
     def _store_key(self, container):

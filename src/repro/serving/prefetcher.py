@@ -93,6 +93,9 @@ class ExpertPrefetcher:
         self.metastore = PatternMetastore(10_000, self.cfg.mining.max_len)
         self.engine = build_engine(PTreeIndex.build([]), self.cfg.heuristic,
                                    use_vectorized=self.cfg.use_vectorized)
+        # Palpascope: tag every background fetch with the pattern that
+        # predicted it so per-pattern hit/waste mass is attributable
+        self.engine.attribute = True
         self._sessions_since_mine = 0
         self.demand_wait_s = 0.0
         self.prefetch_issued = 0
@@ -132,19 +135,28 @@ class ExpertPrefetcher:
         return len(self.metastore)
 
     def _prefetch(self, iid: int):
-        for target in self.engine.on_request(iid):
+        targets = self.engine.on_request(iid)
+        causes = self.engine.last_attribution() or [None] * len(targets)
+        for target, cause in zip(targets, causes):
             if self.cache.contains(target):
                 continue
             key = self.logger.db.item(target)
+            if cause is not None:
+                # attribution keys on container (layer, expert) pairs, not
+                # this prefetcher's private item-id vocabulary
+                cause = dataclasses.replace(
+                    cause, root=self.logger.db.item(cause.root))
             value = self.store.fetch(key)   # async dispatch (not blocked on)
             self.prefetch_issued += 1
             self.cache.put_prefetch(
-                target, value, self.store.nbytes(key), available_at=0.0)
+                target, value, self.store.nbytes(key), available_at=0.0,
+                cause=cause)
 
     # -- observability -----------------------------------------------------
     @property
     def stats(self):
         s = self.cache.stats
+        attr = self.cache.attr
         return {
             "hit_rate": s.hit_rate,
             "precision": s.precision,
@@ -152,4 +164,6 @@ class ExpertPrefetcher:
             "prefetch_hits": s.prefetch_hits,
             "demand_wait_s": self.demand_wait_s,
             "store_fetches": self.store.fetches,
+            "attr_waste_ratio": attr.waste_ratio,
+            "attr_top_patterns": attr.top_rows(5),
         }

@@ -30,7 +30,8 @@ REPO = Path(__file__).resolve().parent.parent
 FIXTURES = REPO / "tests" / "palplint_fixtures"
 ALL_CODES = ["PALP001", "PALP002", "PALP003",
              "PALP101", "PALP102", "PALP103", "PALP104",
-             "PALP201", "PALP202", "PALP203"]
+             "PALP201", "PALP202", "PALP203",
+             "PALP301"]
 
 
 def fixture(name: str) -> str:
@@ -44,7 +45,8 @@ def test_at_least_eight_active_rules():
     assert len(RULES) >= 8
     assert sorted(RULES) == ALL_CODES
     families = {r.family for r in RULES.values()}
-    assert families == {"determinism", "futures", "tracer"}
+    assert families == {"determinism", "futures", "tracer",
+                        "observability"}
 
 
 # ---------------------------------------------- positive/negative pairs
@@ -66,7 +68,8 @@ def test_positive_counts_and_lines_are_stable():
     broadens or narrows shows up as a diff here, not just in CI noise."""
     expect = {"PALP001": 6, "PALP002": 6, "PALP003": 6,
               "PALP101": 3, "PALP102": 2, "PALP103": 2, "PALP104": 2,
-              "PALP201": 3, "PALP202": 3, "PALP203": 2}
+              "PALP201": 3, "PALP202": 3, "PALP203": 2,
+              "PALP301": 5}
     for code, n in sorted(expect.items()):
         diags = [d for d in run_rule(code, fixture(f"{code.lower()}_bad.py"))
                  if d.code == code]

@@ -44,6 +44,7 @@ from typing import Optional
 
 from repro.core.chaos import ChaosEngine, ChaosSchedule
 from repro.core.cluster import ShardedDKVStore, VerdictExchange
+from repro.core.obs import Tracer
 from repro.core.versions import DottedVersion, descends as _vv_descends
 
 #: deterministic op-loop geometry (virtual seconds).  N_KEYS is odd on
@@ -233,9 +234,15 @@ def check_quorum_safety(seed: int, horizon: float,
 
 
 def run_schedule(seed: int, quick: bool = True,
-                 versioning: str = "dotted") -> dict:
+                 versioning: str = "dotted",
+                 trace_sample: float = 0.0) -> dict:
     """One full chaos run: build, fault, heal, audit.  Returns the report
-    dict (``report['errors']`` empty iff every invariant held)."""
+    dict (``report['errors']`` empty iff every invariant held).
+
+    ``trace_sample`` > 0 installs a seeded palpascope tracer sampling
+    1-in-N coordinator ops (``report['tracer']``) — sampling is a pure
+    function of ``(seed, op ordinal)``, so a rerun of the failing seed
+    captures the *same* traces the breaching run did."""
     horizon = 0.25 if quick else 0.6
     store = _build(versioning)
     peer = store.attach_coordinator()
@@ -244,6 +251,10 @@ def run_schedule(seed: int, quick: bool = True,
         horizon=horizon)
     engine = ChaosEngine(schedule)
     store.enable_chaos(engine)
+    tracer = None
+    if trace_sample > 0.0:
+        tracer = Tracer(sample=trace_sample, seed=seed)
+        store.enable_tracing(tracer)
     _coords, unavailable, reads_failed = _workload(
         store, peer, engine, horizon, quick)
     _heal(store, peer, horizon)
@@ -256,6 +267,7 @@ def run_schedule(seed: int, quick: bool = True,
         "seed": seed,
         "versioning": versioning,
         "fingerprint": fingerprint(store),
+        "tracer": tracer,
         "errors": errors,
         "unavailable_writes": unavailable,
         "unavailable_reads": reads_failed,
@@ -285,10 +297,17 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--replay-every", type=int, default=5,
                     help="check byte-identical replay on every Nth seed "
                          "(0 disables)")
+    ap.add_argument("--trace-sample", type=float, default=1.0 / 16,
+                    help="palpascope root-span sampling rate (0 disables "
+                         "tracing)")
+    ap.add_argument("--trace-dir", default=".",
+                    help="where a breaching seed's sampled trace JSON "
+                         "is dumped (chaos_trace_seed<N>.json)")
     args = ap.parse_args(argv)
     failed = 0
     for seed in range(args.start, args.start + args.seeds):
-        report = run_schedule(seed, quick=args.quick)
+        report = run_schedule(seed, quick=args.quick,
+                              trace_sample=args.trace_sample)
         status = "ok" if not report["errors"] else "FAIL"
         print(f"seed {seed:4d}  {status}  fp={report['fingerprint']}  "
               f"siblings={report['siblings_detected']}"
@@ -298,6 +317,10 @@ def main(argv: Optional[list] = None) -> int:
             print(f"    {e}")
         if report["errors"]:
             failed += 1
+            if report["tracer"] is not None:
+                path = f"{args.trace_dir}/chaos_trace_seed{seed}.json"
+                report["tracer"].dump(path)
+                print(f"    sampled trace of the breaching run: {path}")
             print(f"REPRODUCE: PYTHONPATH=src python -m tools.chaoscheck "
                   f"--start {seed} --seeds 1"
                   f"{' --quick' if args.quick else ''}")

@@ -1,0 +1,246 @@
+"""Palpascope trace explorer: render sampled palpascope trace JSON.
+
+The observability layer (``repro.core.obs``) threads a span tree through
+every request path of the simulated cluster — client op → coordinator
+routing → RPC → replica service → cache lookup → prefetch decision — and
+exports sampled traces as JSON (``Tracer.dump``).  This CLI answers the
+two questions the end-to-end aggregates in ``BENCH_*.json`` cannot:
+*why was this op slow* (critical path) and *where does virtual time go*
+(per-span-kind breakdown).  The companion ``attr`` subcommand reads the
+``attr_*`` prefetch-attribution keys a benchmark run exports and prints
+the per-pattern hit/waste table — *which mined pattern earned (or
+wasted) its prefetches*.
+
+Subcommands::
+
+    python -m tools.palpascope summary  TRACE.json      # span-kind table
+    python -m tools.palpascope slowest  TRACE.json -n 5 # slowest roots
+    python -m tools.palpascope critical TRACE.json      # slowest trace's
+                                                        # critical path
+    python -m tools.palpascope attr     BENCH_cluster.json
+
+``--github-summary`` additionally appends the rendered table(s) as
+markdown to ``$GITHUB_STEP_SUMMARY`` (the CI perf-smoke job does this).
+
+Worked example — a degraded-node trace
+--------------------------------------
+
+Capture: ``benchmarks.bench_cluster`` runs its static sweep with a
+seeded 1-in-8 sampled tracer on the last palpatine configuration and
+writes ``TRACE_cluster.json``; ``tools.chaoscheck`` dumps
+``chaos_trace_seed<N>.json`` for any seed that breaches an invariant.
+To capture a degraded-node trace by hand::
+
+    from repro.core import ClusterClient, Tracer
+    tracer = Tracer(sample=1.0, seed=0)
+    cluster.enable_tracing(tracer)   # every coordinator + shard
+    cluster.run(streams)             # one 10x-slow replica in the ring
+    tracer.dump("degraded.json")
+
+Read: ``summary`` shows where virtual time went — with one slow
+replica, the ``service`` row's p99 sits an order of magnitude above its
+p50 while ``cache_lookup`` stays flat::
+
+    kind          count   total_s    mean_s     p50_s     p99_s
+    op              311  0.412310  0.001326  0.000672  0.008457
+    route           298  0.401200  0.001346  0.000655  0.008441
+    rpc             340  0.392110  0.001153  0.000640  0.008420
+    service         322  0.301800  0.000937  0.000510  0.007910
+
+``critical`` walks the slowest trace from its root to the span whose
+end time set the root's completion — the hop with the largest
+``self_s`` is the culprit (here the slow node's service interval; a
+chaos-dropped RPC would instead show ``status=dropped`` with no
+service child and the retry absorbed into ``route`` self time)::
+
+    op       ok       self_s=0.000002  key='order:771'
+    route    ok       self_s=0.000041  node=0 retries=1
+    rpc      ok       self_s=0.000500
+    service  ok       self_s=0.007905  node=0
+
+Attribution closes the loop (``attr``): each row is one mined pattern —
+``(heuristic, tree root, pattern length)`` — with its prefetched /
+hit / unused-evicted mass, so a pattern with high ``unused`` and low
+``hits`` is wasting cache bytes and is a candidate for a higher
+admission threshold, while high-confidence long patterns earning their
+keep justify deeper progressive fetch.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Optional
+
+from repro.core.obs import critical_path, span_kind_breakdown
+
+
+def load_export(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _root_duration(t: dict) -> float:
+    return t.get("end", t["start"]) - t["start"]
+
+
+def _fields_repr(fields: dict, limit: int = 4) -> str:
+    items = list(fields.items())[:limit]
+    return " ".join(f"{k}={v!r}" for k, v in items)
+
+
+def _emit(lines: list[str], github_summary: bool, title: str) -> None:
+    """Print a plain-text table; mirror it to the CI step summary."""
+    print("\n".join(lines))
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if github_summary and path:
+        with open(path, "a") as fh:
+            fh.write(f"### {title}\n\n```\n")
+            fh.write("\n".join(lines))
+            fh.write("\n```\n\n")
+
+
+# ---------------------------------------------------------------- summary
+
+
+def cmd_summary(export: dict, github_summary: bool = False) -> int:
+    traces = export.get("traces", [])
+    lines = [
+        f"palpascope: {len(traces)} sampled traces "
+        f"(sample={export.get('sample')}, seed={export.get('seed')}, "
+        f"roots {export.get('roots_kept')}/{export.get('roots_seen')})",
+        "",
+        f"{'kind':<18} {'count':>6} {'total_s':>10} {'mean_s':>10} "
+        f"{'p50_s':>10} {'p99_s':>10}",
+    ]
+    for kind, st in span_kind_breakdown(traces).items():
+        lines.append(
+            f"{kind:<18} {st['count']:>6} {st['total_s']:>10.6f} "
+            f"{st['mean_s']:>10.6f} {st['p50_s']:>10.6f} "
+            f"{st['p99_s']:>10.6f}")
+    _emit(lines, github_summary, "palpascope · span-kind breakdown")
+    return 0
+
+
+# ---------------------------------------------------------------- slowest
+
+
+def cmd_slowest(export: dict, n: int, github_summary: bool = False) -> int:
+    traces = sorted(export.get("traces", []),
+                    key=_root_duration, reverse=True)
+    lines = [f"{'#':>3} {'duration_s':>11} {'kind':<14} {'status':<8} "
+             f"fields"]
+    for i, t in enumerate(traces[:n]):
+        lines.append(
+            f"{i:>3} {_root_duration(t):>11.6f} {t['kind']:<14} "
+            f"{t.get('status', 'ok'):<8} "
+            f"{_fields_repr(t.get('fields', {}))}")
+    _emit(lines, github_summary, f"palpascope · {n} slowest traces")
+    return 0
+
+
+# --------------------------------------------------------------- critical
+
+
+def cmd_critical(export: dict, index: Optional[int],
+                 github_summary: bool = False) -> int:
+    traces = export.get("traces", [])
+    if not traces:
+        print("no sampled traces in export", file=sys.stderr)
+        return 1
+    if index is None:
+        trace = max(traces, key=_root_duration)
+    elif 0 <= index < len(traces):
+        trace = traces[index]
+    else:
+        print(f"--trace {index} out of range (0..{len(traces) - 1})",
+              file=sys.stderr)
+        return 1
+    lines = [f"{'kind':<18} {'status':<8} {'start':>10} {'duration_s':>11} "
+             f"{'self_s':>10}  fields"]
+    for hop in critical_path(trace):
+        lines.append(
+            f"{hop['kind']:<18} {hop['status']:<8} {hop['start']:>10.6f} "
+            f"{hop['duration_s']:>11.6f} {hop['self_s']:>10.6f}  "
+            f"{_fields_repr(hop['fields'])}")
+    _emit(lines, github_summary, "palpascope · critical path")
+    return 0
+
+
+# ------------------------------------------------------------------- attr
+
+
+def cmd_attr(bench: dict, github_summary: bool = False) -> int:
+    """Render the ``attr_*`` keys a benchmark run exported: roll-ups plus
+    the top-pattern table (``attr_top_patterns``)."""
+    rollups = sorted(k for k in bench
+                     if k.startswith("attr_") and
+                     isinstance(bench[k], (int, float)))
+    if not rollups and "attr_top_patterns" not in bench:
+        print("no attr_* keys in this results JSON (rerun the benchmark "
+              "with this branch's bench_cluster/bench_mining)",
+              file=sys.stderr)
+        return 1
+    lines = []
+    for k in rollups:
+        lines.append(f"{k:<28} {bench[k]:.6g}")
+    top = bench.get("attr_top_patterns") or []
+    if top:
+        lines += ["",
+                  f"{'heuristic':<14} {'root':<20} {'len':>4} "
+                  f"{'prefetched':>10} {'hits':>6} {'unused':>7} "
+                  f"{'bytes_hit':>10} {'conf':>6}"]
+        for r in top:
+            lines.append(
+                f"{str(r.get('heuristic')):<14} "
+                f"{str(r.get('root')):<20} {r.get('length', 0):>4} "
+                f"{r.get('prefetched', 0):>10} {r.get('hits', 0):>6} "
+                f"{r.get('unused', 0):>7} {r.get('bytes_hit', 0):>10} "
+                f"{r.get('mean_confidence', 0.0):>6.3f}")
+    _emit(lines, github_summary, "prefetch attribution · top patterns")
+    return 0
+
+
+# -------------------------------------------------------------------- CLI
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="palpascope", description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("summary",
+                       help="per-span-kind latency breakdown")
+    p.add_argument("trace", help="trace JSON from Tracer.dump")
+    p = sub.add_parser("slowest", help="the N slowest sampled traces")
+    p.add_argument("trace")
+    p.add_argument("-n", type=int, default=5)
+    p = sub.add_parser("critical",
+                       help="critical path of one trace (default: slowest)")
+    p.add_argument("trace")
+    p.add_argument("--trace-index", type=int, default=None,
+                   help="pick a trace by position instead of the slowest")
+    p = sub.add_parser("attr",
+                       help="per-pattern prefetch attribution from a "
+                            "benchmark results JSON")
+    p.add_argument("bench", help="e.g. BENCH_cluster.json")
+    for sp in sub.choices.values():
+        sp.add_argument("--github-summary", action="store_true",
+                        help="also append markdown to "
+                             "$GITHUB_STEP_SUMMARY")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "attr":
+        return cmd_attr(load_export(args.bench), args.github_summary)
+    export = load_export(args.trace)
+    if args.cmd == "summary":
+        return cmd_summary(export, args.github_summary)
+    if args.cmd == "slowest":
+        return cmd_slowest(export, args.n, args.github_summary)
+    return cmd_critical(export, args.trace_index, args.github_summary)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

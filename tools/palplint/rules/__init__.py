@@ -2,6 +2,6 @@
 
 from __future__ import annotations
 
-from . import determinism, futures, tracer  # noqa: F401
+from . import determinism, futures, observability, tracer  # noqa: F401
 
-__all__ = ["determinism", "futures", "tracer"]
+__all__ = ["determinism", "futures", "observability", "tracer"]
