@@ -6,6 +6,7 @@ and the two-space application-level cache — plus the simulated HBase-like
 back store used by the paper-fidelity benchmarks.
 """
 
+from .api import Client
 from .backstore import Channel, Clock, LatencyModel, RPCFuture, SimulatedDKVStore
 from .cache import CacheStats, TwoSpaceCache
 from .chaos import ChaosEngine, ChaosSchedule, Fault
@@ -68,7 +69,7 @@ __all__ = [
     "PrefetchCause", "Span", "Tracer",
     "critical_path", "latency_percentiles", "percentile",
     "span_kind_breakdown",
-    "CacheStats", "Channel", "ChaosEngine", "ChaosSchedule",
+    "CacheStats", "Channel", "ChaosEngine", "ChaosSchedule", "Client",
     "Clock", "DottedVersion", "FailureDetector", "Fault", "FlatForest",
     "HintedHandoffLog",
     "LeaseConflict",

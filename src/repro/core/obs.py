@@ -95,6 +95,12 @@ METRIC_PREFETCH_ISSUED = "prefetch_issued"
 METRIC_PREFETCH_HITS = "prefetch_hits"
 METRIC_RPC_TIMEOUTS = "rpc_timeouts"
 METRIC_STALE_READS = "stale_reads"
+METRIC_DEMAND_WAIT = "demand_wait_s"
+METRIC_STORE_FETCHES = "store_fetches"
+METRIC_SESSIONS = "sessions"
+METRIC_PREFILL_S = "prefill_s"
+METRIC_DECODE_S = "decode_s"
+METRIC_TOKENS = "tokens"
 
 REGISTERED_NAMES = frozenset(
     v for k, v in list(globals().items())

@@ -1,7 +1,21 @@
 """Serving substrate: batched prefill/decode engine + the PALPATINE
-predictive expert prefetcher (the paper's technique at serving time)."""
-from .engine import ServeConfig, ServingEngine
+predictive expert prefetcher (the paper's technique at serving time).
+
+The prefetcher and load generator are numpy-only simulation; the jax
+engine is imported lazily so cluster-serving paths work without an
+accelerator stack installed.
+"""
+from .loadgen import KV, SHAPES, LoadgenConfig, LoadGenerator
 from .prefetcher import ExpertPrefetcher, ExpertStore, PrefetcherConfig
 
 __all__ = ["ExpertPrefetcher", "ExpertStore", "PrefetcherConfig",
+           "KV", "SHAPES", "LoadgenConfig", "LoadGenerator",
            "ServeConfig", "ServingEngine"]
+
+
+def __getattr__(name):
+    # ServingEngine/ServeConfig pull in jax via repro.models
+    if name in ("ServeConfig", "ServingEngine"):
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

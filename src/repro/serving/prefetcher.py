@@ -1,18 +1,20 @@
-"""PALPATINE-powered predictive expert prefetching for MoE serving.
+"""PALPATINE-powered predictive expert prefetching, served by the cluster.
 
 This is the paper's technique integrated as a first-class framework
-feature (DESIGN.md §2): the cold tier (host DRAM / remote-pod HBM) plays
-the DKV back store, device-resident expert weights play the application
-cache, and the per-request expert-routing path — the sequence of
-``(layer, expert)`` containers each decode step touches — is the session
-stream that VMSP mines.
+feature (DESIGN.md §2), now wired through the sharded cluster instead of
+a private in-process cache: MoE expert weights live in ``ShardedDKVStore``
+shards keyed by ``(layer, expert)`` containers, the per-request
+expert-routing path is the session stream VMSP mines, and every fetch —
+demand or background — rides the cluster's chaos/tracing RPC chokepoints
+on the virtual clock.
 
-  ExpertStore      — the back store: expert weights on host, fetched on
-                     demand (real jax.device_put, measured wall time).
-  ExpertPrefetcher — Monitoring + Mining + Metastore + ProbTrees +
-                     Heuristics + two-space cache, all from repro.core;
-                     prefetches run as async device_put (overlapped with
-                     the decode step on real hardware).
+  ExpertStore      — the back store *view*: host ground-truth weights
+                     mirrored into cluster shards as raw bytes; decodes
+                     stored values back to (device) arrays.
+  ExpertPrefetcher — a :class:`repro.core.api.Client` composed over a
+                     ``PalpatineClient`` with the cluster's per-shard
+                     ``ShardedTwoSpaceCache`` and (optionally) the
+                     gossiped ``PatternExchange`` metastore.
 
 The access pattern of MoE routing is exactly the paper's regime: strongly
 recurrent frequent sequences (expert affinity across layers is sticky for
@@ -22,46 +24,83 @@ a given prompt domain) over a large key space (L × E containers).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
-import jax
 import numpy as np
 
+try:  # device placement is optional: the simulation itself is numpy-only
+    import jax
+except ImportError:  # pragma: no cover - tier-1 environments have no jax
+    jax = None
+
 from repro.core import (
-    AccessLogger,
     HeuristicConfig,
     MiningParams,
-    PatternMetastore,
-    PTreeIndex,
-    TwoSpaceCache,
-    build_engine,
-    mine_dynamic_minsup,
+    PalpatineClient,
+    PalpatineConfig,
+    PatternExchange,
+    ShardedDKVStore,
+    ShardedTwoSpaceCache,
+)
+from repro.core.obs import (
+    METRIC_DEMAND_WAIT,
+    METRIC_OPS,
+    METRIC_READ_LATENCY,
+    METRIC_SESSIONS,
+    METRIC_STORE_FETCHES,
+    MetricsRegistry,
 )
 
 __all__ = ["ExpertStore", "ExpertPrefetcher", "PrefetcherConfig"]
 
 
 class ExpertStore:
-    """Host-resident expert weights keyed by (layer, expert)."""
+    """Expert weights keyed by (layer, expert), resident in cluster shards.
+
+    The host ``weights`` dict is the ground truth (tests compare against
+    it); the same arrays are loaded into the ``ShardedDKVStore`` as raw
+    bytes so reads, replication, membership changes, chaos schedules and
+    tracing all apply to expert traffic exactly as to any other
+    container.  ``decode`` turns a stored value back into a (device)
+    array — ``jax.device_put`` when jax is present, a zero-copy numpy
+    view otherwise.
+    """
 
     def __init__(self, n_layers: int, n_experts: int, d: int, f: int,
-                 dtype=np.float32, seed: int = 0):
+                 dtype=np.float32, seed: int = 0,
+                 dkv: Optional[ShardedDKVStore] = None, n_shards: int = 2):
         rng = np.random.default_rng(seed)
+        self.dtype = np.dtype(dtype)
+        self.shape = (d, f)
         self.weights = {
-            (l, e): rng.standard_normal((d, f)).astype(dtype)
+            (l, e): rng.standard_normal((d, f)).astype(self.dtype)
             for l in range(n_layers) for e in range(n_experts)
         }
         self.n_layers, self.n_experts = n_layers, n_experts
+        self.item_bytes = d * f * self.dtype.itemsize
+        self.dkv = dkv if dkv is not None else ShardedDKVStore(n_shards)
+        self.dkv.load((k, w.tobytes()) for k, w in self.weights.items())
         self.fetches = 0
 
     def nbytes(self, key) -> int:
         return self.weights[key].nbytes
 
+    def decode(self, value):
+        """Stored bytes -> (device) array; non-expert payloads (foreign
+        writes, KV shards) pass through untouched."""
+        if (not isinstance(value, (bytes, bytearray, memoryview))
+                or len(value) != self.item_bytes):
+            return value
+        arr = np.frombuffer(value, self.dtype).reshape(self.shape)
+        return jax.device_put(arr) if jax is not None else arr
+
     def fetch(self, key):
-        """Host -> device transfer (the expensive 'back store' access)."""
+        """Deprecated: direct host->device transfer that bypasses the
+        cluster.  Kept for callers that pre-stage weights outside the
+        monitored path; use ``ExpertPrefetcher.read`` instead."""
         self.fetches += 1
-        return jax.device_put(self.weights[key])
+        w = self.weights[key]
+        return jax.device_put(w) if jax is not None else w
 
 
 @dataclasses.dataclass
@@ -74,6 +113,8 @@ class PrefetcherConfig:
         default_factory=lambda: MiningParams(minsup=0.05, min_len=3,
                                              max_len=15, maxgap=1))
     mine_every_sessions: int = 64
+    # a read racing an in-flight prefetch demand-fetches past this wait
+    prefetch_wait_cap: float = 2e-3
     # batched decision engine (flat per-op cost across live contexts);
     # False = scalar per-context oracle, differentially identical
     use_vectorized: bool = True
@@ -81,89 +122,163 @@ class PrefetcherConfig:
 
 
 class ExpertPrefetcher:
-    """Wraps an ExpertStore with the PALPATINE pipeline."""
+    """The PALPATINE pipeline over a cluster-resident ``ExpertStore``.
 
-    def __init__(self, store: ExpertStore, cfg: Optional[PrefetcherConfig] = None):
+    A :class:`repro.core.api.Client`: composes a ``PalpatineClient``
+    against ``store.dkv`` with the cluster's per-shard two-space cache,
+    so monitoring, mining, probabilistic trees, heuristics, prefetch
+    batching/shedding, tracing and chaos adjudication are all the
+    cluster's own — nothing here re-implements them.  Metrics are
+    ``MetricsRegistry``-backed; the dict-shaped ``stats`` view is
+    retained for existing benchmarks/examples.
+    """
+
+    def __init__(self, store: ExpertStore,
+                 cfg: Optional[PrefetcherConfig] = None,
+                 exchange: Optional[PatternExchange] = None,
+                 clock=None):
         self.store = store
         self.cfg = cfg or PrefetcherConfig()
-        item_bytes = next(iter(store.weights.values())).nbytes
-        self.cache = TwoSpaceCache(
-            self.cfg.cache_experts * item_bytes, self.cfg.preemptive_frac)
-        self.logger = AccessLogger(session_gap=float("inf"))  # explicit cuts
-        self.metastore = PatternMetastore(10_000, self.cfg.mining.max_len)
-        self.engine = build_engine(PTreeIndex.build([]), self.cfg.heuristic,
-                                   use_vectorized=self.cfg.use_vectorized)
-        # Palpascope: tag every background fetch with the pattern that
-        # predicted it so per-pattern hit/waste mass is attributable
-        self.engine.attribute = True
+        pcfg = PalpatineConfig(
+            heuristic=self.cfg.heuristic,
+            cache_bytes=self.cfg.cache_experts * store.item_bytes,
+            preemptive_frac=self.cfg.preemptive_frac,
+            mining=self.cfg.mining,
+            session_gap=float("inf"),          # explicit end_session cuts
+            prefetch_wait_cap=self.cfg.prefetch_wait_cap,
+            use_vectorized=self.cfg.use_vectorized,
+            min_patterns=self.cfg.min_patterns,
+        )
+        dkv = store.dkv
+
+        def factory(client: PalpatineClient) -> ShardedTwoSpaceCache:
+            return ShardedTwoSpaceCache(
+                dkv.n_shards, pcfg.cache_bytes, pcfg.preemptive_frac,
+                key_of=client.logger.db.item, shard_of=dkv.shard_of)
+
+        self.client = PalpatineClient(dkv, pcfg, clock=clock,
+                                      cache_factory=factory)
+        #: gossiped cluster metastore; mine_now publishes + pulls when set
+        self.exchange = exchange
+        self.metrics = MetricsRegistry()
+        self._ops = self.metrics.counter(METRIC_OPS)
+        self._sessions = self.metrics.counter(METRIC_SESSIONS)
+        self._demand_wait = self.metrics.gauge(METRIC_DEMAND_WAIT)
+        self._store_fetches = self.metrics.gauge(METRIC_STORE_FETCHES)
+        self._read_latency = self.metrics.histogram(METRIC_READ_LATENCY)
         self._sessions_since_mine = 0
-        self.demand_wait_s = 0.0
-        self.prefetch_issued = 0
 
-    # -- the serving engine calls this per (layer, expert) access ---------
-    def access(self, layer: int, expert: int):
-        """Returns the device-resident expert weight, fetching on miss."""
-        key = (layer, expert)
-        self.logger.record(0.0, key)
-        iid = self.logger.db.item_id(key)
-        hit = self.cache.lookup(iid)
-        if hit is not None:
-            value = hit[0]
-        else:
-            t0 = time.perf_counter()
-            value = self.store.fetch(key)
-            jax.block_until_ready(value)
-            self.demand_wait_s += time.perf_counter() - t0
-            self.cache.put_demand(iid, value, self.store.nbytes(key))
-        self._prefetch(iid)
-        return value
+    # -- delegated pipeline state (one source of truth: the client) -------
+    @property
+    def cache(self):
+        return self.client.cache
 
-    def end_session(self):
+    @property
+    def logger(self):
+        return self.client.logger
+
+    @property
+    def metastore(self):
+        return self.client.metastore
+
+    @property
+    def engine(self):
+        return self.client.engine
+
+    @property
+    def clock(self):
+        return self.client.clock
+
+    @property
+    def demand_wait_s(self) -> float:
+        """Virtual seconds demand reads spent waiting on the cluster."""
+        return self._demand_wait.value
+
+    # -- Client surface ----------------------------------------------------
+    def read(self, container):
+        """One monitored expert/KV read: (decoded value, virtual latency)."""
+        misses0 = self.cache.stats.misses
+        value, latency = self.client.read(container)
+        self._ops.inc()
+        self._read_latency.record(latency)
+        if self.cache.stats.misses > misses0:
+            self._demand_wait.set(self._demand_wait.value + latency)
+        return self.store.decode(value), latency
+
+    def read_many(self, containers):
+        """Batched read (overlapped in-flight fetches): (values, latency)."""
+        misses0 = self.cache.stats.misses
+        values, latency = self.client.read_many(containers)
+        self._ops.inc(len(containers))
+        self._read_latency.record(latency)
+        if self.cache.stats.misses > misses0:
+            self._demand_wait.set(self._demand_wait.value + latency)
+        return [self.store.decode(v) for v in values], latency
+
+    def write(self, container, value) -> float:
+        """Write-through expert update; arrays are serialized and the
+        host ground-truth mirror is kept in sync."""
+        if isinstance(value, np.ndarray):
+            self.store.weights[container] = value.astype(self.store.dtype)
+            value = self.store.weights[container].tobytes()
+        return self.client.write(container, value)
+
+    def end_session(self) -> None:
         """A request finished: cut the session; maybe re-mine."""
-        self.logger.flush_session()
+        self.client.end_session()
+        self._sessions.inc()
         self._sessions_since_mine += 1
         if self._sessions_since_mine >= self.cfg.mine_every_sessions:
             self._sessions_since_mine = 0
             self.mine_now()
 
-    def mine_now(self) -> int:
-        db = self.logger.snapshot()
-        patterns, _ = mine_dynamic_minsup(
-            db, self.cfg.mining, min_patterns=self.cfg.min_patterns)
-        self.metastore.populate(patterns)
-        self.engine.replace_index(PTreeIndex.build(self.metastore))
-        return len(self.metastore)
+    def mine_now(self, use_dynamic_minsup: bool = True) -> int:
+        """Mine the routing backlog; gossip through the cluster exchange
+        when one is attached (publish ours, pull the cluster's)."""
+        self.client.mine_now(use_dynamic_minsup)
+        if self.exchange is not None:
+            self.exchange.publish(self.client)
+            self.exchange.pull(self.client)
+        return len(self.client.metastore)
 
-    def _prefetch(self, iid: int):
-        targets = self.engine.on_request(iid)
-        causes = self.engine.last_attribution() or [None] * len(targets)
-        for target, cause in zip(targets, causes):
-            if self.cache.contains(target):
-                continue
-            key = self.logger.db.item(target)
-            if cause is not None:
-                # attribution keys on container (layer, expert) pairs, not
-                # this prefetcher's private item-id vocabulary
-                cause = dataclasses.replace(
-                    cause, root=self.logger.db.item(cause.root))
-            value = self.store.fetch(key)   # async dispatch (not blocked on)
-            self.prefetch_issued += 1
-            self.cache.put_prefetch(
-                target, value, self.store.nbytes(key), available_at=0.0,
-                cause=cause)
+    # -- deprecated shims --------------------------------------------------
+    def access(self, layer: int, expert: int):
+        """Deprecated: ``read((layer, expert))`` is the unified surface.
+        Returns only the decoded weight (old calling convention)."""
+        value, _ = self.read((layer, expert))
+        return value
+
+    # -- cluster wiring ----------------------------------------------------
+    def enable_tracing(self, tracer) -> None:
+        """Palpascope spans from the client's cache lookup down to the
+        replica's service interval — the cluster wiring shape."""
+        self.store.dkv.enable_tracing(tracer)
+        self.client.tracer = tracer
+
+    def enable_chaos(self, engine) -> None:
+        """Fault schedules adjudicate every expert fetch RPC."""
+        self.store.dkv.enable_chaos(engine)
 
     # -- observability -----------------------------------------------------
     @property
     def stats(self):
+        """Dict-shaped view over the MetricsRegistry snapshot + cache
+        counters (``tools/palpascope.py`` renders the ``attr_*`` keys
+        like a cluster run's)."""
         s = self.cache.stats
         attr = self.cache.attr
+        self._store_fetches.set(self.store.dkv.gets)
+        snap = self.metrics.snapshot()
         return {
             "hit_rate": s.hit_rate,
             "precision": s.precision,
             "prefetches": s.prefetches,
             "prefetch_hits": s.prefetch_hits,
-            "demand_wait_s": self.demand_wait_s,
-            "store_fetches": self.store.fetches,
+            "demand_wait_s": snap[METRIC_DEMAND_WAIT],
+            "store_fetches": snap[METRIC_STORE_FETCHES],
+            "ops": snap[METRIC_OPS],
+            "sessions": snap[METRIC_SESSIONS],
+            "read_latency": snap[METRIC_READ_LATENCY],
             "attr_waste_ratio": attr.waste_ratio,
             "attr_top_patterns": attr.top_rows(5),
         }

@@ -1,11 +1,11 @@
 """Determinism family: PALP001 wall-clock, PALP002 unseeded RNG,
 PALP003 unordered-set iteration.
 
-Scope: simulation code — ``src/repro/core/``, ``benchmarks/``,
-``tests/``.  The simulation runs on a virtual ``Clock``; results must
-be bit-identical across hosts and runs, so wall-clock reads, global RNG
-state, and set-iteration order are all bugs waiting for a different
-machine.  ``benchmarks/common.py`` is the one sanctioned timing harness
+Scope: simulation code — ``src/repro/core/``, ``src/repro/serving/``,
+``benchmarks/``, ``tests/``.  The simulation runs on a virtual
+``Clock``; results must be bit-identical across hosts and runs, so
+wall-clock reads, global RNG state, and set-iteration order are all
+bugs waiting for a different machine.  ``benchmarks/common.py`` is the one sanctioned timing harness
 and is excluded from PALP001.
 """
 
@@ -17,7 +17,8 @@ from ..astutil import ImportMap, call_name, walk_own
 from ..diagnostics import Diagnostic
 from ..registry import Edit, FileContext, Rule, register
 
-DETERMINISM_PREFIXES = ("src/repro/core/", "benchmarks/", "tests/")
+DETERMINISM_PREFIXES = ("src/repro/core/", "src/repro/serving/",
+                        "benchmarks/", "tests/")
 
 
 def _in_scope(path: str) -> bool:

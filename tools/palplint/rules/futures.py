@@ -187,10 +187,19 @@ register(Rule(
 _CHANNEL_ATTRS = {"write_channel", "demand", "background"}
 
 
+#: layers above the backstore that drive cluster traffic and must go
+#: through its RPC chokepoints (the serving stack included — expert and
+#: KV fetches ride the same chaos/tracing-adjudicated sends)
+_CHOKEPOINT_CLIENTS = _CLUSTER_FILES[1:] + (
+    "src/repro/serving/prefetcher.py",
+    "src/repro/serving/loadgen.py",
+)
+
+
 def _chokepoint_scope(path: str) -> bool:
     # backstore.py IS the chokepoint layer — its own issue() calls are
     # the sanctioned sends; everyone above it must not reach around
-    return path in _CLUSTER_FILES[1:]
+    return path in _CHOKEPOINT_CLIENTS
 
 
 def _check_direct_channel_send(ctx: FileContext) -> list[Diagnostic]:
